@@ -1,0 +1,55 @@
+"""Paper Table 5: ||A - BP||_2 across the grid + the eq. (3) bound.
+
+Runs in complex128 like the paper (f64 enabled at startup); the default
+SMALL_GRID reproduces the paper's REGIME (error ~ sqrt(min(m,n)) * 1e-16
+x O(10..100), bound satisfied 'reasonably tightly'); ``--full`` runs the
+paper's exact rows and should land in the 1e-10..1e-9 band of Table 5.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.configs.paper_rid import (PAPER_GRID, PAPER_TABLE5_ERRORS,
+                                     SMALL_GRID)
+from repro.core import error_bound, expected_sigma_kp1, rid, spectral_error
+
+from .bench_total import lowrank_complex
+from .common import emit
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sketch", default="srft",
+                    choices=["srft", "srht", "gaussian"])
+    args = ap.parse_args(argv)
+    grid = PAPER_GRID if args.full else SMALL_GRID
+    rows = []
+    for i, case in enumerate(grid):
+        key = jax.random.key(case.k + 13)
+        A = lowrank_complex(key, case.m, case.n, case.k, jnp.complex128)
+        dec = rid(jax.random.fold_in(key, 3), A, case.k,
+                  sketch_kind=args.sketch)
+        err = float(spectral_error(jax.random.fold_in(key, 4), A, dec.B,
+                                   dec.P, iters=40))
+        floor = expected_sigma_kp1(case.m, case.n)
+        bound = error_bound(case.m, case.n, case.k) * floor
+        row = {"k": case.k, "m": case.m, "n": case.n, "err_2norm": err,
+               "sigma_floor": floor, "eq3_bound": bound,
+               "within_bound": err <= bound}
+        if args.full:
+            row["paper_table5"] = PAPER_TABLE5_ERRORS[i]
+        rows.append(row)
+    emit(rows, header=f"Table 5 analogue: ||A-BP||_2 in complex128 "
+                      f"(sketch={args.sketch}); eq.(3) bound check")
+    assert all(r["within_bound"] for r in rows), "eq.(3) bound violated!"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Figures 1-2: parallel speed-up of the (distributed) RID.
+
+No multi-chip hardware exists in this container, so — per DESIGN.md — the
+scaling curve is derived STRUCTURALLY: the column-sharded RID is lowered
+on meshes of 4..128 fake devices and each width's per-device roofline
+time is modeled from compiled cost analysis under the v5e constants,
+
+    t(N) = max(flops/peak, bytes/hbm_bw, collective_bytes/link_bw).
+
+Speedup(N) = t(4) * 4 / (t(N) * N) * N  (paper's baseline is 4 procs).
+The paper's qualitative result — near-linear scaling of the column-
+parallel phases with the replicated tiny-QR eventually flattening the
+curve — reproduces directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from repro.configs.paper_rid import PAPER_GRID, SMALL_GRID
+
+from .common import emit
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def worker(k, m, n, nproc) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nproc}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scaling_worker",
+         str(k), str(m), str(n), str(nproc)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def model_time(rec: dict) -> float:
+    return max(rec["flops"] / PEAK, rec["bytes"] / HBM,
+               rec["collective_bytes"] / LINK)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--procs", default="4,8,16,32,64,128")
+    ap.add_argument("--rows", default="1,6",
+                    help="grid row indices (default: a tall m-heavy "
+                         "row and a wide n-heavy row — the paper's two "
+                         "scaling regimes)")
+    ap.add_argument("--paper", action="store_true",
+                    help="use the paper's full-size rows (lowering-only: "
+                         "the worker takes ShapeDtypeStructs, so no 64 GB "
+                         "matrices are allocated)")
+    args = ap.parse_args(argv)
+    procs = [int(p) for p in args.procs.split(",")]
+    grid = PAPER_GRID if args.paper else SMALL_GRID
+    rows = []
+    for case in [grid[int(i)] for i in args.rows.split(",")]:
+        recs = {p: worker(case.k, case.m, case.n, p) for p in procs}
+        t4 = model_time(recs[procs[0]])
+        for p in procs:
+            t = model_time(recs[p])
+            speedup = (t4 / t) * (procs[0])   # vs the 4-proc baseline
+            rows.append({"k": case.k, "m": case.m, "n": case.n, "procs": p,
+                         "flops_per_dev": recs[p]["flops"],
+                         "coll_bytes_per_dev": recs[p]["collective_bytes"],
+                         "model_time_s": t,
+                         "speedup_vs4": speedup,
+                         "efficiency": speedup / p})
+    emit(rows, header="Figures 1-2 analogue: structural parallel scaling "
+                      "of distributed RID (v5e roofline model)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 2: the randomization (FFT) phase.
+
+Compares the paper-faithful complex SRFT against the TPU-native SRHT
+(jnp + Pallas kernel) and the Gaussian-matmul sketch (jnp + Pallas MXU
+kernel) — the 'if a faster randomization is available, use it' trade the
+paper itself invites.  Table 2's m-dominance is visible directly.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_rid import PAPER_GRID, SMALL_GRID
+from repro.core import gaussian_sketch, srft_sketch, srht_sketch
+from repro.kernels import sketch_matmul, srht_pallas
+from repro.core.sketch import next_pow2
+
+from .common import emit, time_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    grid = PAPER_GRID if args.full else SMALL_GRID
+    rdt = jnp.float64 if args.full else jnp.float32
+    if args.full:
+        jax.config.update("jax_enable_x64", True)
+    rows = []
+    for case in grid:
+        key = jax.random.key(case.k)
+        A = jax.random.normal(key, (case.m, case.n), rdt)
+        l = case.l
+
+        t_srft = time_fn(jax.jit(lambda k, a: srft_sketch(k, a, l)), key, A)
+        t_srht = time_fn(jax.jit(lambda k, a: srht_sketch(k, a, l)), key, A)
+        t_gauss = time_fn(jax.jit(lambda k, a: gaussian_sketch(k, a, l)), key, A)
+
+        mp = next_pow2(case.m)
+        signs = jax.random.rademacher(key, (case.m,), dtype=rdt)
+        rowsel = jax.random.randint(key, (l,), 0, mp)
+        t_srht_pl = time_fn(lambda s, a, r: srht_pallas(s, a, r), signs, A, rowsel)
+
+        omega = jax.random.normal(key, (l, case.m), rdt)
+        t_mm_pl = time_fn(lambda o, a: sketch_matmul(o, a), omega, A)
+
+        rows.append({"k": case.k, "m": case.m, "n": case.n,
+                     "srft_s": t_srft, "srht_s": t_srht,
+                     "gaussian_s": t_gauss, "srht_pallas_s": t_srht_pl,
+                     "gauss_pallas_s": t_mm_pl})
+    emit(rows, header="Table 2 analogue: sketch phase by backend "
+                      "(pallas columns run interpret=True on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Roofline table: reads experiments/dryrun/*.json and derives, per
+(arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / peak_FLOPs            [s, per chip]
+  memory term     = HLO_bytes / HBM_bw                [s, per chip]
+  collective term = collective_bytes / link_bw        [s, per chip]
+
+(extrapolated-to-full-depth numbers; the dry-run writes both raw and
+extrapolated).  Also MODEL_FLOPS = 6*N*D (active N for MoE) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware constants (TPU v5e): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ALIASES, get_config
+from repro.launch.shapes import SHAPES
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        return 6.0 * n_active * tokens
+    if case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * case.global_batch          # decode: 1 token/seq
+
+
+def chips(mesh: str) -> int:
+    return 512 if mesh == "multipod" else 256
+
+
+def load_records(pattern: str = "*") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(ART_DIR, f"{pattern}.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+DCN = 6.25e9        # inter-pod link model (DCN-class)
+
+
+def analyze_record(r: dict) -> dict | None:
+    if r.get("status") != "ok":
+        return None
+    fl = r.get("flops_extrapolated", r.get("flops", 0.0))
+    by = r.get("bytes_accessed_extrapolated", r.get("bytes_accessed", 0.0))
+    co = r.get("collective_total_extrapolated", r.get("collective_total", 0.0))
+    ip = r.get("interpod_bytes_extrapolated", r.get("interpod_bytes", 0.0))
+    fl, by, co, ip = max(fl, 0.0), max(by, 0.0), max(co, 0.0), max(ip, 0.0)
+    t_c = fl / PEAK
+    t_m = by / HBM
+    t_x = co / LINK
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(r["arch"], r["shape"])
+    mf_dev = mf / chips(r["mesh"])
+    useful = mf_dev / fl if fl else 0.0
+    # roofline fraction: useful model flops per chip over the time the
+    # dominant term implies, as a fraction of peak
+    t_dom = max(t_c, t_m, t_x)
+    frac = (mf_dev / PEAK) / t_dom if t_dom else 0.0
+    return dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                compress=r.get("compress", False),
+                mode=r.get("mode", "tp"),
+                compute_s=t_c, memory_s=t_m, collective_s=t_x,
+                interpod_s=ip / DCN,
+                dominant=dom, model_flops_per_chip=mf_dev,
+                useful_ratio=useful, roofline_fraction=frac)
+
+
+def table(recs: list[dict], *, markdown: bool = True) -> str:
+    rows = [a for a in (analyze_record(r) for r in recs) if a]
+    rows.sort(key=lambda a: (a["arch"], a["shape"], a["mesh"],
+                             a["mode"], a["compress"]))
+    hdr = ["arch", "shape", "mesh", "mode", "rcmp", "compute_s", "memory_s",
+           "collective_s", "interpod_s", "dominant", "useful", "roofline%"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for a in rows:
+        cells = [a["arch"], a["shape"], a["mesh"], a["mode"],
+                 "y" if a["compress"] else "",
+                 f"{a['compute_s']:.3e}", f"{a['memory_s']:.3e}",
+                 f"{a['collective_s']:.3e}", f"{a['interpod_s']:.3e}",
+                 a["dominant"],
+                 f"{a['useful_ratio']:.2f}",
+                 f"{100 * a['roofline_fraction']:.1f}"]
+        lines.append("| " + " | ".join(cells) + " |" if markdown
+                     else ",".join(cells))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="*")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    recs = load_records(args.pattern)
+    if not recs:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return
+    print(table(recs, markdown=not args.csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-scaling]
+
+Default is the CPU-feasible SMALL_GRID (aspect ratios preserved); --full
+runs the paper's 64 GB grid.  The roofline section renders only if
+dry-run artifacts exist (launch/dryrun.py writes them).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def section(title: str):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-scaling", action="store_true",
+                    help="skip the subprocess-heavy Figures 1-2 section")
+    args = ap.parse_args()
+    flags = ["--full"] if args.full else []
+    t0 = time.time()
+
+    from . import (bench_error, bench_qr, bench_scaling, bench_sketch,
+                   bench_total, bench_tsolve, roofline)
+
+    section("Table 1: total RID runtime (phases)")
+    bench_total.main(flags)
+    section("Table 2: sketch / FFT phase by backend")
+    bench_sketch.main(flags)
+    section("Table 3: Gram-Schmidt phase")
+    bench_qr.main(flags)
+    section("Table 4: factorization of R")
+    bench_tsolve.main(flags)
+    section("Table 5: ||A - BP||_2 + eq.(3) bound")
+    bench_error.main(flags)
+    if not args.skip_scaling:
+        section("Figures 1-2: structural parallel scaling")
+        bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6"])
+        section("Figures 1-2 at the paper's full sizes (lowering-only)")
+        bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "0,6",
+                            "--paper"])
+    section("Roofline (from dry-run artifacts)")
+    roofline.main([])
+    print(f"\nbenchmarks completed in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

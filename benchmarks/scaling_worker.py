@@ -1,0 +1,45 @@
+"""Subprocess worker for bench_scaling: lowers the distributed RID on an
+N-device mesh and reports per-device roofline terms as JSON.
+
+Invoked as:  python -m benchmarks.scaling_worker <k> <m> <n> <nproc>
+(the parent sets XLA_FLAGS for the fake device count).
+"""
+import json
+import sys
+
+
+def main():
+    k, m, n, nproc = map(int, sys.argv[1:5])
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import AxisType
+
+    from repro.core.distributed import rid_distributed
+    from repro.launch.dryrun import collective_bytes
+
+    mesh = jax.make_mesh((nproc,), ("data",),
+                         axis_types=(AxisType.Auto,))
+    key = jax.random.key(0)
+    A = jax.ShapeDtypeStruct((m, n), jnp.float32)
+
+    def run(key, A):
+        dec = rid_distributed(key, A, k, mesh=mesh, axis="data",
+                              sketch_kind="gaussian")
+        return dec.B, dec.P
+
+    with mesh:
+        lowered = jax.jit(run).lower(key, A)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    out = {
+        "nproc": nproc,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(sum(collective_bytes(
+            compiled.as_text()).values())),
+    }
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

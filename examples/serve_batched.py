@@ -1,0 +1,70 @@
+"""Serving example: continuous batching + the paper's low-rank weights.
+
+Runs the ServeEngine over a batch of requests twice — dense weights vs
+RID-compressed weights — and reports the storage saving and output drift
+(the paper's 'store in much smaller memory / core ops run faster' claim,
+measured end-to-end).
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch granite-3-2b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serving import (GenerationRequest, ServeEngine, compress_params,
+                           compression_report)
+
+
+def run_engine(cfg, params, prompts, label):
+    eng = ServeEngine(cfg, params, max_batch=4, max_len=96)
+    for i, p in enumerate(prompts):
+        eng.submit(GenerationRequest(request_id=i, prompt=p,
+                                     max_new_tokens=12))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"  [{label:12s}] {len(done)} requests, {toks} tokens, "
+          f"{dt:.1f}s ({toks / dt:.1f} tok/s)")
+    return {r.request_id: r.output for r in done}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--rank", type=int, default=24)
+    args = ap.parse_args()
+    # smoke-scale model with f32 weights; force mild low-rank structure by
+    # training-free random init + generous rank so some layers compress.
+    cfg = get_smoke_config(args.arch).replace(dtype="float32")
+    params = init_params(jax.random.key(0), cfg)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 10))
+                            ).astype(np.int32) for _ in range(8)]
+
+    print(f"{cfg.name} (reduced): serving {len(prompts)} requests")
+    dense_out = run_engine(cfg, params, prompts, "dense")
+
+    cparams, report = compress_params(jax.random.key(1), params,
+                                      rank=args.rank, energy_keep=0.80)
+    print(compression_report(report))
+    # materialize factored weights back for the engine (the engine's model
+    # fns take dense arrays; apply_low_rank is used by fused serving paths)
+    from repro.serving.compress import LowRankWeight
+    dparams = jax.tree.map(
+        lambda x: x.materialize() if isinstance(x, LowRankWeight) else x,
+        cparams, is_leaf=lambda x: isinstance(x, LowRankWeight))
+    rid_out = run_engine(cfg, dparams, prompts, f"rid rank={args.rank}")
+
+    agree = np.mean([dense_out[i] == rid_out[i] for i in dense_out])
+    print(f"greedy outputs identical for {agree:.0%} of requests "
+          f"(drift is expected where energy was truncated)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end training driver: a real LM trained for a few hundred steps
+through the full stack — sharded train_step, AdamW + cosine schedule,
+deterministic data, async checkpoints, optional RandLR gradient
+compression.
+
+  PYTHONPATH=src python examples/train_lm.py \
+      [--arch xlstm-125m] [--steps 300] [--scale 0.25] [--compress-rank 8]
+
+``--scale`` shrinks width/depth for CPU runs (scale=1.0 is the real
+config; 0.25 of granite-3-2b is ~40M params and trains at a few s/step
+on a laptop CPU).
+"""
+import argparse
+import os
+
+if "XLA_FLAGS" not in os.environ:                       # small local mesh
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import TrainConfig
+from repro.launch.train import train_loop
+from repro.optim import CompressorConfig
+
+
+def scaled(cfg, s: float):
+    rnd = lambda x, mult: max(mult, int(x * s) // mult * mult)
+    kw = dict(
+        n_layers=max(2, int(cfg.n_layers * s)),
+        d_model=rnd(cfg.d_model, 64),
+        n_heads=max(2, int(cfg.n_heads * s)),
+        n_kv_heads=max(2, min(cfg.n_kv_heads, int(cfg.n_heads * s))),
+        d_ff=rnd(cfg.d_ff, 64) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 8192),
+    )
+    if cfg.head_dim is not None:
+        kw["head_dim"] = rnd(cfg.head_dim, 16)
+    if cfg.moe:
+        kw["n_experts"] = max(4, int(cfg.n_experts * s))
+        kw["moe_d_ff"] = rnd(cfg.moe_d_ff, 64)
+    if cfg.family == "ssm":
+        kw["slstm_at"] = tuple(i for i in cfg.slstm_at
+                               if i < kw["n_layers"])
+    return cfg.replace(**kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--compress-rank", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = scaled(get_config(args.arch), args.scale)
+    n_params = cfg.param_count()
+    print(f"{cfg.name} @ scale {args.scale}: ~{n_params / 1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model}")
+    mesh = make_host_mesh()
+    print(f"mesh: {dict(mesh.shape)}")
+    tcfg = TrainConfig(
+        peak_lr=args.lr, total_steps=args.steps,
+        warmup_steps=max(5, args.steps // 20),
+        compress=(CompressorConfig(rank=args.compress_rank)
+                  if args.compress_rank else None))
+    out = train_loop(cfg, tcfg, mesh, global_batch=args.batch,
+                     seq_len=args.seq, steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=20)
+    ls = out["losses"]
+    print(f"\nloss: start {ls[0]:.3f} -> min {min(ls):.3f} -> "
+          f"final {ls[-1]:.3f} over {len(ls)} steps")
+    assert ls[-1] < ls[0] - 0.5, "model failed to learn the synthetic task"
+    print("learning verified (>0.5 nats drop).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Sharded, atomic, async, topology-agnostic checkpointing."""
+from .store import (CheckpointManager, latest_step, restore_pytree,
+                    save_pytree)
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree", "latest_step"]

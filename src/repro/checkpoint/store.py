@@ -1,0 +1,146 @@
+"""Checkpoint store: atomic (tmp + rename), async (background thread),
+and MESH-AGNOSTIC — leaves are stored as logical global arrays, so a
+checkpoint written on a 2x16x16 mesh restores onto 16x16 (or any other
+mesh) by re-sharding at load: the elastic-scaling path the runtime's
+failure handler uses.
+
+Format: one directory per step —
+  step_000123/
+    .tmp-* during write, atomically renamed when complete
+    manifest.json   — flattened key paths, shapes, dtypes
+    <leaf-id>.npy   — one file per leaf (numpy, host-gathered)
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save_pytree(directory: str, step: int, tree, *, _sync: bool = True) -> str:
+    """Write atomically: everything lands in ``.tmp-step_N`` then one rename."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:06d}")
+    tmp = os.path.join(directory, f".tmp-step_{step:06d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {}
+    for i, (name, leaf) in enumerate(_flatten_with_names(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest[name] = {"file": fn, "shape": list(arr.shape),
+                          "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := _STEP_RE.match(d))]
+    return max(steps) if steps else None
+
+
+def restore_pytree(directory: str, step: int, like, *,
+                   shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedSharding — the re-shard-on-restore path; leaves are device_put
+    with the NEW sharding regardless of the mesh that wrote them."""
+    path = os.path.join(directory, f"step_{step:06d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    names = [n for n, _ in _flatten_with_names(like)]
+    leaves_like = jax.tree.leaves(like)
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None or
+                                    hasattr(x, "spec"))
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for name, leaf, shd in zip(names, leaves_like, shard_leaves):
+        ent = manifest.get(name)
+        if ent is None:
+            raise KeyError(f"checkpoint at {path} is missing leaf {name}")
+        arr = np.load(os.path.join(path, ent["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{name}: checkpoint shape {arr.shape} != "
+                             f"expected {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jnp.asarray(arr))
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async save + retention.  ``save`` snapshots to host THEN hands the
+    file write to a background thread, so the train loop only blocks for
+    the device->host copy (and never for disk)."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree):
+        self.wait()                       # one in-flight write at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def write():
+            try:
+                save_pytree(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:    # surfaced on next wait()
+                self._error = e
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+            self.wait()
+
+    def restore_latest(self, like, *, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore_pytree(self.directory, step, like,
+                                    shardings=shardings)
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := _STEP_RE.match(d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:06d}"),
+                          ignore_errors=True)

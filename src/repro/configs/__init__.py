@@ -1,0 +1,58 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+One module per assigned architecture with the exact published numbers
+(``[source; verified-tier]`` noted per file), plus ``paper_rid`` for the
+paper's own matrix-decomposition workloads.  ``SMOKE`` variants shrink
+depth/width/experts for the CPU one-step tests; FULL configs are only
+ever lowered via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "granite_3_2b",
+    "qwen3_8b",
+    "h2o_danube_1_8b",
+    "qwen2_7b",
+    "phi35_moe",
+    "qwen2_moe_a2_7b",
+    "qwen2_vl_2b",
+    "whisper_tiny",
+    "jamba_v01_52b",
+    "xlstm_125m",
+)
+
+# CLI aliases (assignment ids -> module names)
+ALIASES = {
+    "granite-3-2b": "granite_3_2b",
+    "qwen3-8b": "qwen3_8b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen2-7b": "qwen2_7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "whisper-tiny": "whisper_tiny",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "xlstm-125m": "xlstm_125m",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if name not in ARCHS:
+        raise ValueError(f"unknown arch {arch!r}; known: {sorted(ARCHS)} "
+                         f"(aliases: {sorted(ALIASES)})")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str):
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).SMOKE
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,30 @@
+"""Core randomized low-rank decomposition library (the paper's contribution).
+
+Public API:
+  rid, rid_from_sketch       — randomized interpolative decomposition A ~= B P
+  rsvd, rsvd_from_id         — randomized SVD built on the ID
+  sketch / srft / srht / gaussian — the randomization operators (paper eq. 4)
+  cgs2_pivoted_qr            — the paper's iterated classical Gram-Schmidt QR
+  householder_qr, cholesky_qr2 — beyond-paper panel factorizations
+  solve_upper_triangular     — the column-parallel interpolation solve
+  rid_distributed            — shard_map column-parallel RID (paper section 3)
+  spectral_error, error_bound — paper eq. (3) validation utilities
+"""
+from .errors import error_bound, expected_sigma_kp1, spectral_error, spectral_norm_dense
+from .distributed import rid_distributed, shard_columns
+from .qr import cgs2_pivoted_qr, cholesky_qr2, householder_qr
+from .rid import rid, rid_from_sketch
+from .rsvd import rsvd, rsvd_from_id
+from .sketch import fwht, gaussian_sketch, next_pow2, sketch, srft_sketch, srht_sketch
+from .tsolve import interp_from_qr, solve_upper_triangular, solve_upper_triangular_xla
+from .types import IDResult, QRResult, SketchResult, SVDResult
+
+__all__ = [
+    "rid", "rid_from_sketch", "rsvd", "rsvd_from_id",
+    "sketch", "srft_sketch", "srht_sketch", "gaussian_sketch", "fwht", "next_pow2",
+    "cgs2_pivoted_qr", "householder_qr", "cholesky_qr2",
+    "solve_upper_triangular", "solve_upper_triangular_xla", "interp_from_qr",
+    "rid_distributed", "shard_columns",
+    "spectral_error", "spectral_norm_dense", "error_bound", "expected_sigma_kp1",
+    "IDResult", "QRResult", "SketchResult", "SVDResult",
+]

@@ -1,0 +1,147 @@
+"""QR factorizations of the sketch (paper eq. 8-9).
+
+The paper's stability choice is the *iterated classical Gram-Schmidt*
+(CGS2) with greedy column pivoting [Bjorck '94, Lingen '00, Hoffman '89]:
+classical (not modified) GS so every projection is a dense matvec that
+parallelizes, iterated (a second orthogonalization pass) for stability.
+That is ``cgs2_pivoted_qr`` below, expressed as a ``lax.fori_loop`` whose
+body is three GEMV-shaped contractions — exactly the shape the XMT ran
+thread-per-element and a TPU runs on the VPU/MXU.
+
+Beyond-paper options (DESIGN.md section 2):
+
+* ``householder_qr``  — the paper's own "would be ~2x faster" suggestion,
+  for the tall-skinny panel ``Y[:, piv]``.
+* ``cholesky_qr2``    — two rounds of ``Q = Y @ chol(Y^H Y)^-H``; turns
+  orthonormalization into pure MXU matmuls (the TPU-native winner for
+  well-conditioned panels, used by the RSVD path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import QRResult
+
+__all__ = ["cgs2_pivoted_qr", "householder_qr", "cholesky_qr2"]
+
+
+def _h(x: jax.Array) -> jax.Array:
+    """Conjugate transpose that is a plain transpose for real dtypes."""
+    return x.conj().T if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.T
+
+
+@partial(jax.jit, static_argnames=("k",))
+def cgs2_pivoted_qr(Y: jax.Array, k: int) -> QRResult:
+    """Greedy-pivoted CGS2 thin QR of the wide sketch ``Y`` (l x n).
+
+    Selects ``k`` columns by largest residual norm (the permutation ``Pi``
+    the paper folds into the randomization), orthonormalizes each against
+    the running basis TWICE (the "iteration" of iterated CGS), and
+    deflates the residual ``Z <- Z - q q^H Z`` so the next pivot reflects
+    the remaining energy.
+
+    Returns ``QRResult(Q, R, piv)`` with ``R = Q^H Y`` recomputed exactly
+    at the end, so ``R[:, piv]`` is upper triangular up to orthogonalization
+    error and ``Y[:, piv] ~= Q @ triu(R[:, piv])``.
+    """
+    l, n = Y.shape
+    if not (0 < k <= min(l, n)):
+        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, Y of shape {Y.shape}")
+    dtype = Y.dtype
+    rdtype = jnp.finfo(dtype).dtype
+
+    def body(j, state):
+        Q, piv, Z, res2 = state
+        p = jnp.argmax(res2).astype(jnp.int32)
+        v = lax.dynamic_slice_in_dim(Z, p, 1, axis=1)[:, 0]
+        # Pass 1: Z is already orthogonal to Q[:, :j] (deflated below), so
+        # normalizing the residual column IS the classical GS step.
+        v = v / jnp.maximum(jnp.linalg.norm(v), jnp.finfo(rdtype).tiny).astype(dtype)
+        # Pass 2 ("iterated"): re-orthogonalize against the basis built so
+        # far; columns >= j of Q are still zero so the masked GEMV is safe.
+        c = _h(Q) @ v
+        v = v - Q @ c
+        v = v / jnp.maximum(jnp.linalg.norm(v), jnp.finfo(rdtype).tiny).astype(dtype)
+        Q = lax.dynamic_update_slice_in_dim(Q, v[:, None], j, axis=1)
+        piv = piv.at[j].set(p)
+        # Deflate: one rank-1 update across all columns (the column-parallel
+        # work unit the XMT ran one-thread-per-column).
+        w = _h(Z) @ v                      # (n,) coefficients Z^H q
+        Z = Z - v[:, None] * w.conj()[None, :]
+        res2 = jnp.maximum(res2 - jnp.abs(w) ** 2, jnp.zeros((), rdtype))
+        res2 = res2.at[p].set(jnp.asarray(-1.0, rdtype))   # never re-pick
+        return Q, piv, Z, res2
+
+    Q0 = jnp.zeros((l, k), dtype)
+    piv0 = jnp.zeros((k,), jnp.int32)
+    res2_0 = jnp.sum(jnp.abs(Y) ** 2, axis=0).astype(rdtype)
+    Q, piv, _, _ = lax.fori_loop(0, k, body, (Q0, piv0, Y, res2_0))
+    R = _h(Q) @ Y
+    return QRResult(Q=Q, R=R, piv=piv)
+
+
+@jax.jit
+def householder_qr(Y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Compact-WY-free Householder thin QR of a TALL panel (l x k, l >= k).
+
+    The paper learned post-hoc that Householder reflections halve the GS
+    runtime at equal stability; we provide it for the panel factorization
+    benchmark (benchmarks/bench_qr.py).  Returns ``(Q, R)`` with ``Q``
+    l x k orthonormal and ``R`` k x k upper triangular.
+    """
+    l, k = Y.shape
+    dtype = Y.dtype
+    rdtype = jnp.finfo(dtype).dtype
+
+    def body(j, state):
+        A, V = state
+        col = A[:, j]
+        idx = jnp.arange(l)
+        tail = jnp.where(idx >= j, col, jnp.zeros((), dtype))
+        sigma = jnp.linalg.norm(tail).astype(dtype)
+        ajj = col[j]
+        # phase(ajj): keep complex-safe sign choice for stability
+        absa = jnp.abs(ajj)
+        phase = jnp.where(absa > 0, ajj / jnp.maximum(absa, jnp.finfo(rdtype).tiny).astype(dtype),
+                          jnp.ones((), dtype))
+        alpha = -phase * sigma
+        v = tail.at[j].add(-alpha)
+        vnorm = jnp.maximum(jnp.linalg.norm(v), jnp.finfo(rdtype).tiny).astype(dtype)
+        v = v / vnorm
+        A = A - 2.0 * jnp.outer(v, v.conj() @ A)
+        V = lax.dynamic_update_slice_in_dim(V, v[:, None], j, axis=1)
+        return A, V
+
+    A, V = lax.fori_loop(0, k, body, (Y, jnp.zeros((l, k), dtype)))
+    R = jnp.triu(A[:k, :])
+    # Re-materialize Q by applying the reflectors (in reverse) to I_{l x k}.
+    def apply_back(j_, Q):
+        j = k - 1 - j_
+        v = V[:, j]
+        return Q - 2.0 * jnp.outer(v, v.conj() @ Q)
+    Q = lax.fori_loop(0, k, apply_back, jnp.eye(l, k, dtype=dtype))
+    return Q, R
+
+
+@jax.jit
+def cholesky_qr2(Y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """CholeskyQR2 of a TALL panel (l x k): pure-matmul orthonormalization.
+
+    One round loses half the digits of kappa(Y); the second round recovers
+    machine-precision orthogonality for kappa below ~1e7 [Yamamoto et al.].
+    All flops are GEMM-shaped -> MXU-bound on TPU, which is why the RSVD
+    path prefers it over Gram-Schmidt (DESIGN.md section 2).
+    """
+    def one_round(Q):
+        G = _h(Q) @ Q
+        C = jnp.linalg.cholesky(G)             # lower: G = C C^H
+        Qn = _h(jnp.linalg.solve(C, _h(Q)))    # Q C^-H, solve on the small k x k
+        return Qn, C
+    Q1, C1 = one_round(Y)
+    Q2, C2 = one_round(Q1)
+    R = _h(C2) @ _h(C1)                        # upper triangular k x k
+    return Q2, R

@@ -1,0 +1,59 @@
+"""Randomized interpolative decomposition (the paper's core algorithm).
+
+Pipeline (paper section 2):                      cost (paper's accounting)
+  1. sketch      Y = Phi A          (l x n)      O(mn log m)   [FFT backend]
+  2. pivoted QR  Y Pi ~= Q [R1 R2]               O(l k n)      [the bottleneck]
+  3. interp      R1 T = R2, P = [I T] Pi^-1      O(k(l+k)(n-k)) [column-parallel]
+  4. subset      B = A[:, J]
+
+``rid`` is jit-compatible (k, l static).  Every stage takes an explicit
+PRNG key; the same key reproduces the same decomposition bit-for-bit,
+which the fault-tolerance layer relies on for replay.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .qr import cgs2_pivoted_qr
+from .sketch import sketch
+from .tsolve import interp_from_qr
+from .types import IDResult
+
+__all__ = ["rid", "rid_from_sketch"]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int) -> IDResult:
+    """Steps 2-4 given an existing sketch ``Y`` (l x n)."""
+    qr = cgs2_pivoted_qr(Y, k)
+    P = interp_from_qr(qr.R, qr.piv)
+    B = jnp.take(A, qr.piv, axis=1)
+    # P is in sketch dtype (complex for SRFT); B carries A's dtype.  Cast P
+    # to A's dtype when A is real and the sketch was complex: the imaginary
+    # part is pure roundoff because A's row space is real.
+    if jnp.issubdtype(P.dtype, jnp.complexfloating) and not jnp.issubdtype(
+            A.dtype, jnp.complexfloating):
+        P = P.real.astype(A.dtype)
+    return IDResult(B=B, P=P, J=qr.piv, Q=qr.Q, R=qr.R)
+
+
+def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
+        sketch_kind: str = "srft") -> IDResult:
+    """Rank-``k`` randomized ID of ``A``: ``A ~= B @ P``.
+
+    Args:
+      key: PRNG key driving ``D``/``S`` (and ``Omega`` for gaussian).
+      A: (m, n) matrix, real or complex.
+      k: target rank (static).
+      l: sketch rows; defaults to the paper's universal choice ``l = 2k``.
+      sketch_kind: 'srft' (paper-faithful) | 'srht' | 'gaussian'.
+    """
+    l = 2 * k if l is None else l
+    if l < k:
+        raise ValueError(f"need l >= k, got l={l} < k={k}")
+    Y = sketch(key, A, l, kind=sketch_kind).Y
+    return rid_from_sketch(A, Y, k)

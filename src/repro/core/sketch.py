@@ -1,0 +1,141 @@
+"""Randomized sketching operators: ``Y = Phi @ A`` with ``Phi`` l x m.
+
+Three interchangeable backends (paper section 2 + DESIGN.md section 2):
+
+* ``srft``     — the paper's faithful operator ``Y = S F D A`` (eq. 4-7):
+                 random complex phases per row, column-wise DFT, and
+                 ``l`` i.i.d. uniformly sampled rows.
+* ``srht``     — real-valued TPU-native analogue: random signs, a fast
+                 Walsh-Hadamard transform (power-of-two butterflies that
+                 block cleanly into VMEM — see ``repro.kernels.srht``),
+                 and the same row sampling.
+* ``gaussian`` — ``Y = Omega A`` as a single dense matmul.  On TPU the
+                 MXU makes this the wall-clock winner for moderate ``m``
+                 despite the worse O(l m n) flop count; the paper itself
+                 invites replacing the randomization step with whatever
+                 is fastest on the target machine.
+
+All backends act on the ROW index of ``A`` only, so a column-sharded
+``A`` sketches with ZERO communication (the property the paper's XMT
+implementation exploits via column-parallel FFTs).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .types import SketchResult
+
+__all__ = [
+    "sketch",
+    "srft_sketch",
+    "srht_sketch",
+    "gaussian_sketch",
+    "fwht",
+    "next_pow2",
+]
+
+
+def next_pow2(m: int) -> int:
+    return 1 << max(0, (m - 1)).bit_length()
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Orthonormal fast Walsh-Hadamard transform along axis 0.
+
+    ``x.shape[0]`` must be a power of two.  Pure-jnp reference used both
+    by the ``srht`` backend and as the oracle for the Pallas kernel.
+    """
+    m = x.shape[0]
+    if m & (m - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {m}")
+    tail = x.shape[1:]
+    y = x
+    h = 1
+    while h < m:
+        y = y.reshape((m // (2 * h), 2, h) + tail)
+        y = jnp.stack([y[:, 0] + y[:, 1], y[:, 0] - y[:, 1]], axis=1)
+        y = y.reshape((m,) + tail)
+        h *= 2
+    return y * jnp.asarray(1.0 / math.sqrt(m), dtype=x.dtype)
+
+
+def _sample_rows(key: jax.Array, m: int, l: int) -> jax.Array:
+    """Paper eq. (5): l i.i.d. uniform row indices (with replacement)."""
+    return jax.random.randint(key, (l,), 0, m, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("l",))
+def srft_sketch(key: jax.Array, A: jax.Array, l: int) -> jax.Array:
+    """Paper eq. (4): ``Y = S F D A`` — the subsampled random Fourier transform.
+
+    ``D`` multiplies each row by a random unit phase (eq. 7), ``F`` is the
+    unnormalized DFT applied to every column (eq. 6), ``S`` keeps ``l``
+    random rows (eq. 5).  Output is complex regardless of input dtype.
+    """
+    m = A.shape[0]
+    kphase, krows = jax.random.split(key)
+    cdtype = jnp.complex128 if A.dtype in (jnp.float64, jnp.complex128) else jnp.complex64
+    rdtype = jnp.finfo(cdtype).dtype  # float64 for c128, float32 for c64
+    phi = jax.random.uniform(kphase, (m,), dtype=rdtype)
+    d = jnp.exp((2j * jnp.pi) * phi).astype(cdtype)
+    DA = d[:, None] * A.astype(cdtype)
+    FDA = jnp.fft.fft(DA, axis=0)
+    rows = _sample_rows(krows, m, l)
+    scale = jnp.asarray(1.0 / math.sqrt(l * m) * math.sqrt(m), dtype=cdtype)  # = 1/sqrt(l)
+    return FDA[rows] * scale
+
+
+@partial(jax.jit, static_argnames=("l",))
+def srht_sketch(key: jax.Array, A: jax.Array, l: int) -> jax.Array:
+    """Real subsampled randomized Hadamard transform (TPU-native SRFT).
+
+    Rows are zero-padded to the next power of two; the padded rows carry
+    no information about ``A`` so the row space is preserved exactly.
+    """
+    m, _ = A.shape
+    mp = next_pow2(m)
+    ksign, krows = jax.random.split(key)
+    signs = jax.random.rademacher(ksign, (m,), dtype=A.dtype)
+    DA = signs[:, None] * A
+    if mp != m:
+        DA = jnp.pad(DA, ((0, mp - m), (0, 0)))
+    HDA = fwht(DA)
+    rows = _sample_rows(krows, mp, l)
+    scale = jnp.asarray(math.sqrt(mp / l), dtype=A.dtype)
+    return HDA[rows] * scale
+
+
+@partial(jax.jit, static_argnames=("l",))
+def gaussian_sketch(key: jax.Array, A: jax.Array, l: int) -> jax.Array:
+    """Dense Gaussian sketch ``Y = Omega A`` — one MXU matmul, no FFT."""
+    m = A.shape[0]
+    if jnp.issubdtype(A.dtype, jnp.complexfloating):
+        rdtype = jnp.float64 if A.dtype == jnp.complex128 else jnp.float32
+        kr, ki = jax.random.split(key)
+        omega = (jax.random.normal(kr, (l, m), dtype=rdtype)
+                 + 1j * jax.random.normal(ki, (l, m), dtype=rdtype)).astype(A.dtype)
+        omega = omega * jnp.asarray(1.0 / math.sqrt(2 * l), dtype=A.dtype)
+    else:
+        omega = jax.random.normal(key, (l, m), dtype=A.dtype)
+        omega = omega * jnp.asarray(1.0 / math.sqrt(l), dtype=A.dtype)
+    return omega @ A
+
+
+_BACKENDS = {
+    "srft": srft_sketch,
+    "srht": srht_sketch,
+    "gaussian": gaussian_sketch,
+}
+
+
+def sketch(key: jax.Array, A: jax.Array, l: int, kind: str = "srft") -> SketchResult:
+    """Dispatch to a sketch backend.  ``kind in {'srft','srht','gaussian'}``."""
+    try:
+        fn = _BACKENDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown sketch kind {kind!r}; pick from {sorted(_BACKENDS)}")
+    return SketchResult(Y=fn(key, A, l), kind=kind)

@@ -1,0 +1,60 @@
+"""Result containers for the randomized decomposition core.
+
+All containers are NamedTuples so they are pytrees and flow through
+``jax.jit`` / ``shard_map`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SketchResult(NamedTuple):
+    """The compressed matrix ``Y = Phi @ A`` plus the operator metadata."""
+
+    Y: jax.Array          # (l, n) sketch
+    kind: str = "gaussian"
+
+
+class QRResult(NamedTuple):
+    """Pivoted thin-QR of the sketch: ``Y[:, piv] ~= Q @ triu(R[:, piv])``."""
+
+    Q: jax.Array          # (l, k) orthonormal columns
+    R: jax.Array          # (k, n) = Q^H Y (columns in ORIGINAL order)
+    piv: jax.Array        # (k,) int32 pivot column indices, selection order
+
+
+class IDResult(NamedTuple):
+    """Interpolative decomposition ``A ~= B @ P`` (paper eq. (1)).
+
+    ``B = A[:, J]`` is a column subset of ``A`` and ``P`` carries an exact
+    ``k x k`` identity in the pivot columns (paper eq. (11), up to the
+    permutation ``Pi``).
+    """
+
+    B: jax.Array          # (m, k) selected columns of A
+    P: jax.Array          # (k, n) interpolation matrix, P[:, J] == I_k
+    J: jax.Array          # (k,) pivot indices into columns of A
+    Q: jax.Array          # (l, k) sketch-space basis (for error estimation)
+    R: jax.Array          # (k, n) sketch-space coefficients
+
+    def reconstruct(self) -> jax.Array:
+        return self.B @ self.P
+
+
+class SVDResult(NamedTuple):
+    """Rank-k randomized SVD ``A ~= U @ diag(S) @ Vh`` built on the ID."""
+
+    U: jax.Array          # (m, k)
+    S: jax.Array          # (k,) non-negative, descending
+    Vh: jax.Array         # (k, n)
+
+    def reconstruct(self) -> jax.Array:
+        return (self.U * self.S[None, :].astype(self.U.dtype)) @ self.Vh
+
+
+def real_dtype_of(dtype) -> jnp.dtype:
+    """float dtype backing ``dtype`` (itself if already real)."""
+    return jnp.finfo(dtype).dtype if jnp.issubdtype(dtype, jnp.inexact) else jnp.dtype(dtype)

@@ -1,0 +1,13 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of ``(seed, step, host)`` — the property
+the fault-tolerance layer relies on: after a restore-from-checkpoint at
+step ``s`` (possibly on a DIFFERENT mesh), replaying from ``s`` yields
+bitwise-identical batches, so training curves are reproducible across
+failures and elastic re-meshes.
+"""
+from .synthetic import SyntheticConfig, batch_for_step, make_batch_iterator
+from .prefetch import PrefetchIterator
+
+__all__ = ["SyntheticConfig", "batch_for_step", "make_batch_iterator",
+           "PrefetchIterator"]

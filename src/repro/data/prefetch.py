@@ -1,0 +1,39 @@
+"""Background prefetch: overlaps host-side batch synthesis/IO with device
+compute (one of the overlap tricks the scale-out design counts on)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+
+class PrefetchIterator:
+    """Wraps an iterator with a daemon thread + bounded queue."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._err: BaseException | None = None
+
+        def worker():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:          # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(self._done)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

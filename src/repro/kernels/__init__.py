@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  sketch_matmul — tiled MXU GEMM for the Gaussian sketch Y = Omega A
+  srht          — blocked fast Walsh-Hadamard transform (TPU-native SRFT)
+  cgs           — fused Gram-Schmidt block deflation Z - Q (Q^T Z)
+  tsolve        — column-parallel blocked triangular solve (paper eq. 10)
+  flash         — FlashAttention with causal block skipping (the LM
+                  stack's hot-spot; beyond-paper)
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper, interpret=True off-TPU) and ref.py (pure-jnp oracle).
+"""
+from .cgs.ops import project_out
+from .flash.ops import flash_attention
+from .sketch_matmul.ops import sketch_matmul
+from .srht.ops import fwht as fwht_pallas, srht as srht_pallas
+from .tsolve.ops import tsolve
+
+__all__ = ["project_out", "flash_attention", "sketch_matmul",
+           "fwht_pallas", "srht_pallas", "tsolve"]

@@ -1,0 +1,53 @@
+"""Fused classical-Gram-Schmidt block deflation kernel: ``Z - Q (Q^T Z)``.
+
+This is the paper's CGS inner loop hoisted to a block: on the XMT the
+projection was a GEMV per thread; on TPU the profitable unit is a pair of
+back-to-back MXU GEMMs over a column slab of ``Z`` that never leaves
+VMEM between them (the fusion XLA will not do across a dot-dot pair with
+an intermediate of different shape).
+
+  grid = (n / bn,)
+  per step:  load Q (l x k, broadcast over steps) + Z slab (l x bn)
+             W = Q^T Z     (k x bn)   MXU
+             O = Z - Q W   (l x bn)   MXU + VPU subtract, fused in VMEM
+
+The kernel is used by the blocked CGS2 panel QR (benchmarks/bench_qr.py)
+and by the re-orthogonalization passes of the gradient compressor.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import acc_dtype_for, cdiv
+
+
+def _project_out_kernel(q_ref, z_ref, o_ref):
+    q = q_ref[...]                       # (l, k)
+    z = z_ref[...]                       # (l, bn)
+    acc = acc_dtype_for(z.dtype)
+    w = jnp.dot(q.T, z, preferred_element_type=acc)          # (k, bn)
+    qw = jnp.dot(q, w.astype(q.dtype), preferred_element_type=acc)
+    o_ref[...] = (z.astype(acc) - qw).astype(z.dtype)
+
+
+def project_out_kernel(q: jax.Array, z: jax.Array, *, bn: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """Raw pallas_call.  Pre-padded: bn | n."""
+    l, k = q.shape
+    l2, n = z.shape
+    assert l == l2 and n % bn == 0, (q.shape, z.shape, bn)
+    return pl.pallas_call(
+        _project_out_kernel,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((l, k), lambda j: (0, 0)),   # basis, revisited per slab
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((l, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((l, n), z.dtype),
+        interpret=interpret,
+    )(q, z)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the CGS block-deflation kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import project_out_kernel
+
+__all__ = ["project_out"]
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def project_out(q: jax.Array, z: jax.Array, *, bn: int = 128,
+                interpret: bool | None = None) -> jax.Array:
+    """``z - q @ (q^T z)`` with q (l x k) orthonormal, z (l x n).  Real dtypes
+    take the Pallas path; complex falls back to the oracle formula (the
+    production LM path is real — DESIGN.md section 2)."""
+    interpret = interpret_default() if interpret is None else interpret
+    if jnp.issubdtype(z.dtype, jnp.complexfloating) or \
+            jnp.issubdtype(q.dtype, jnp.complexfloating):
+        return z - q @ (q.conj().T @ z)
+    l, n = z.shape
+    np_ = round_up(n, bn)
+    out = project_out_kernel(q, pad_to(z, (l, np_)), bn=bn, interpret=interpret)
+    return out[:, :n]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused CGS block deflation ``Z - Q (Q^T Z)``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import acc_dtype_for
+
+
+def project_out_ref(q: jax.Array, z: jax.Array) -> jax.Array:
+    """Project the columns of ``z`` (l x n) off the orthonormal basis
+    ``q`` (l x k): the classical-Gram-Schmidt block update."""
+    acc = acc_dtype_for(z.dtype)
+    w = jnp.dot(q.T, z, preferred_element_type=acc)
+    return (z.astype(acc) - jnp.dot(q, w.astype(q.dtype),
+                                    preferred_element_type=acc)).astype(z.dtype)

@@ -1,0 +1,50 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling with
+MXU-aligned tiles) and are VALIDATED on CPU via ``interpret=True``,
+which executes the kernel body with the same blocking semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# MXU/VPU native tile granularity on TPU: last dim 128 lanes, second-to-last
+# 8 sublanes (f32).  Matmul tiles should be multiples of 128 on both MXU dims.
+LANE = 128
+SUBLANE = 8
+
+# VMEM is ~16 MiB/core on v5e; keep per-step working sets well under half so
+# the pipeline can double-buffer.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Interpret kernels everywhere except on real TPU hardware."""
+    return not on_tpu()
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_to(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Zero-pad trailing edges of ``x`` up to ``shape``."""
+    pads = [(0, t - s) for s, t in zip(x.shape, shape)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def acc_dtype_for(dtype) -> jnp.dtype:
+    """Accumulator dtype: f32 for <=32-bit floats (MXU accumulates f32),
+    f64 when the input is f64 (interpret-mode / CPU validation path)."""
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32

@@ -1,0 +1,112 @@
+"""FlashAttention Pallas TPU kernel — the LM stack's compute hot-spot.
+
+Closes the 2x causal-flop waste of the pure-JAX blockwise path
+(models/attention.py): the grid walks (batch*heads, q-blocks, kv-blocks)
+with kv innermost; online-softmax state lives in VMEM scratch across the
+kv sweep, and ``@pl.when`` SKIPS kv-blocks strictly in the causal future
+(or outside the sliding window), so the masked half of the score matrix
+is never computed — on real hardware the causal triangle costs ~S^2/2,
+not S^2.
+
+Blocking: per step the working set is q (bq, hd) + k/v (bk, hd) +
+scores (bq, bk) + acc (bq, hd) floats; defaults (bq=bk=256, hd<=256)
+stay well inside the VMEM budget with double-buffering headroom, and
+both matmul dims are multiples of the 128-lane MXU width.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import cdiv
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  nk: int, bq: int, bk: int, T: int, causal: bool,
+                  window):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level skip: the whole kv block is in the causal future /
+    # outside the window.  This is the flop saving the pure-JAX path
+    # cannot express.
+    q_start = qi * bq
+    q_end = q_start + bq - 1
+    k_start = kj * bk
+    k_end = k_start + bk - 1
+    live = k_start < T
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_end)
+    if window is not None:
+        live = jnp.logical_and(live, k_end > q_start - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < T
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]                             # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _store():
+        l_safe = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *, T: int,
+                 causal: bool = True, window=None, bq: int = 256,
+                 bk: int = 256, interpret: bool = True) -> jax.Array:
+    """Raw pallas_call.  q: (BH, Sq, hd); k/v: (BH, Sk, hd), pre-padded so
+    bq | Sq and bk | Sk; ``T`` is the true (unpadded) kv length."""
+    BH, Sq, hd = q.shape
+    _, Sk, _ = k.shape
+    assert Sq % bq == 0 and Sk % bk == 0, (q.shape, k.shape, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    return pl.pallas_call(
+        partial(_flash_kernel, nk=nk, bq=bq, bk=bk, T=T, causal=causal,
+                window=window),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

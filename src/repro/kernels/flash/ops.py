@@ -1,0 +1,44 @@
+"""Jit'd wrapper: (B, S, H, hd) attention through the Pallas flash kernel.
+
+Handles head-major flattening, shape padding to block multiples, and the
+pre-softmax scale.  ``interpret=True`` off-TPU (CPU validation); on TPU
+the same call compiles to the MXU kernel with causal block skipping.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import flash_kernel
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None, bq: int = 256,
+                    bk: int = 256, interpret: bool | None = None
+                    ) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, H, hd) (heads already matched).
+    Returns (B, S, H*hd)."""
+    interpret = interpret_default() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    tohm = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], hd)
+    qf = tohm(q) * jnp.asarray(scale, q.dtype)
+    kf, vf = tohm(k), tohm(v)
+    Sp, Tp = round_up(S, bq), round_up(T, bk)
+    if Sp != S:
+        qf = jnp.pad(qf, ((0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        kf = jnp.pad(kf, ((0, 0), (0, Tp - T), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, Tp - T), (0, 0)))
+    out = flash_kernel(qf, kf, vf, T=T, causal=causal, window=window,
+                       bq=bq, bk=bk, interpret=interpret)
+    out = out[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return out.reshape(B, S, H * hd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, T=None,
+              causal: bool = True, window=None) -> jax.Array:
+    """Dense masked attention.  q: (BH, Sq, hd); k/v: (BH, Sk, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    T = Sk if T is None else T
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = kpos < T
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window is not None:
+        ok = ok & (kpos > qpos - window)
+    s = jnp.where(ok[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

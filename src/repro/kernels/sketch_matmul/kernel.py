@@ -1,0 +1,62 @@
+"""Tiled MXU matmul kernel for the Gaussian sketch ``Y = Omega @ A``.
+
+The sketch is the paper's randomization step re-derived for the TPU cost
+model (DESIGN.md section 2): ``Omega`` is l x m with l = 2k << m, so the
+product is a skinny-times-wide GEMM.  Blocking:
+
+  grid = (l/bl, n/bn, m/bk)   — k-innermost so each (i, j) output tile
+                                 accumulates over m in VMEM scratch and is
+                                 written back exactly once (one HBM store
+                                 per output element).
+
+VMEM per step: bl*bk + bk*bn + bl*bn(acc) floats.  Defaults (128, 128, 512)
+use ~0.6 MiB — deep double-buffering headroom.  All tile dims are multiples
+of the 128-lane MXU width.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import acc_dtype_for, cdiv
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_tiles: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_tiles - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sketch_matmul_kernel(x: jax.Array, y: jax.Array, *, bl: int = 128,
+                         bn: int = 128, bk: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """Raw pallas_call.  Requires pre-padded shapes: bl | l, bn | n, bk | m."""
+    l, m = x.shape
+    m2, n = y.shape
+    assert m == m2, (x.shape, y.shape)
+    assert l % bl == 0 and n % bn == 0 and m % bk == 0, (x.shape, y.shape, (bl, bn, bk))
+    k_tiles = cdiv(m, bk)
+    grid = (cdiv(l, bl), cdiv(n, bn), k_tiles)
+    return pl.pallas_call(
+        partial(_matmul_kernel, k_tiles=k_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bl, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, n), y.dtype),
+        scratch_shapes=[pltpu.VMEM((bl, bn), acc_dtype_for(y.dtype))],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,51 @@
+"""Jit'd public wrapper for the sketch matmul kernel.
+
+Handles: shape padding to tile multiples, complex inputs (decomposed into
+real GEMMs — TPU has no complex MXU path), and interpret-mode fallback on
+non-TPU backends.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import sketch_matmul_kernel
+
+__all__ = ["sketch_matmul"]
+
+
+def _real_matmul(x, y, bl, bn, bk, interpret):
+    l, m = x.shape
+    _, n = y.shape
+    lp, mp, np_ = round_up(l, bl), round_up(m, bk), round_up(n, bn)
+    xp = pad_to(x, (lp, mp))
+    yp = pad_to(y, (mp, np_))
+    out = sketch_matmul_kernel(xp, yp, bl=bl, bn=bn, bk=bk, interpret=interpret)
+    return out[:l, :n]
+
+
+@partial(jax.jit, static_argnames=("bl", "bn", "bk", "interpret"))
+def sketch_matmul(omega: jax.Array, a: jax.Array, *, bl: int = 128,
+                  bn: int = 128, bk: int = 512,
+                  interpret: bool | None = None) -> jax.Array:
+    """``omega @ a`` via the tiled Pallas kernel; supports real and complex.
+
+    Complex inputs use the 4-GEMM decomposition (re/im) so every MXU op is
+    real — the TPU-native treatment of the paper's complex arithmetic.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    cx = jnp.issubdtype(omega.dtype, jnp.complexfloating) or \
+        jnp.issubdtype(a.dtype, jnp.complexfloating)
+    if not cx:
+        return _real_matmul(omega, a, bl, bn, bk, interpret)
+    rdt = jnp.float64 if (omega.dtype == jnp.complex128 or a.dtype == jnp.complex128) \
+        else jnp.float32
+    xr, xi = omega.real.astype(rdt), omega.imag.astype(rdt)
+    yr, yi = a.real.astype(rdt), a.imag.astype(rdt)
+    mm = partial(_real_matmul, bl=bl, bn=bn, bk=bk, interpret=interpret)
+    re = mm(xr, yr) - mm(xi, yi)
+    im = mm(xr, yi) + mm(xi, yr)
+    return (re + 1j * im).astype(jnp.complex128 if rdt == jnp.float64 else jnp.complex64)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the tiled sketch matmul ``Y = Omega @ A``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import acc_dtype_for
+
+
+def sketch_matmul_ref(omega: jax.Array, a: jax.Array) -> jax.Array:
+    """(l, m) @ (m, n) -> (l, n) with f32 (f64 for f64 inputs) accumulation."""
+    acc = acc_dtype_for(a.dtype)
+    return jnp.dot(omega, a, preferred_element_type=acc).astype(a.dtype)

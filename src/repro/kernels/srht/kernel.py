@@ -1,0 +1,60 @@
+"""Blocked fast Walsh-Hadamard transform kernel (TPU-native SRFT stage).
+
+The paper's randomization runs an FFT down every column (eq. 6); the TPU
+re-derivation replaces it with the Walsh-Hadamard transform, whose radix-2
+butterflies are adds/subs on contiguous lanes — pure VPU work with
+perfectly regular strides, no twiddle-factor loads and no complex
+arithmetic (DESIGN.md section 2).
+
+Blocking: grid over column tiles; each kernel step owns the FULL row
+extent (m) of a ``bn``-column slab, runs all log2(m) butterfly stages
+in VMEM, and writes the slab back once.  That bounds m to what a slab
+can hold (VMEM_BUDGET / bn floats); larger m are handled in ops.py by
+the Kronecker four-step split H_{m1*m2} = H_{m1} (x) H_{m2}, i.e. two
+kernel sweeps with a transpose between — the classic large-FFT
+factorization, applied to Hadamard.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv
+
+# Largest single-slab row extent: 8192 rows x 128 cols x 4 B = 4 MiB.
+MAX_SLAB_M = 8192
+
+
+def _fwht_kernel(x_ref, o_ref, *, m: int, normalize: bool):
+    y = x_ref[...]                       # (m, bn) slab in VMEM
+    bn = y.shape[1]
+    h = 1
+    while h < m:                         # static: log2(m) unrolled stages
+        y = y.reshape(m // (2 * h), 2, h, bn)
+        y = jnp.stack([y[:, 0] + y[:, 1], y[:, 0] - y[:, 1]], axis=1)
+        y = y.reshape(m, bn)
+        h *= 2
+    if normalize:
+        y = y * jnp.asarray(1.0 / math.sqrt(m), y.dtype)
+    o_ref[...] = y
+
+
+def fwht_kernel(x: jax.Array, *, bn: int = 128, normalize: bool = True,
+                interpret: bool = True) -> jax.Array:
+    """Raw pallas_call: FWHT along axis 0.  Pre-padded: bn | n, m a power
+    of two and <= MAX_SLAB_M."""
+    m, n = x.shape
+    assert m & (m - 1) == 0 and m <= MAX_SLAB_M, m
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        partial(_fwht_kernel, m=m, normalize=normalize),
+        grid=(cdiv(n, bn),),
+        in_specs=[pl.BlockSpec((m, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

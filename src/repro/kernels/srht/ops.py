@@ -1,0 +1,71 @@
+"""Jit'd wrappers: blocked FWHT (any power-of-two m) and the full SRHT.
+
+For m > MAX_SLAB_M the transform is factored Kronecker-style:
+``H_m = H_m1 (x) H_m2`` with ``m = m1 * m2``, realized as
+
+    x.reshape(m1, m2, n) --FWHT over m2--> transpose --FWHT over m1-->
+
+so each sweep is again a column-slab kernel pass.  The transpose between
+sweeps is the only data reshuffle — on TPU it is an HBM-bandwidth copy,
+the same trade the paper's radix-4 FFT makes between stages.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import MAX_SLAB_M, fwht_kernel
+
+__all__ = ["fwht", "srht"]
+
+
+def _slab_fwht(x, bn, normalize, interpret):
+    m, n = x.shape
+    np_ = round_up(n, bn)
+    out = fwht_kernel(pad_to(x, (m, np_)), bn=bn, normalize=normalize,
+                      interpret=interpret)
+    return out[:, :n]
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def fwht(x: jax.Array, *, bn: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Orthonormal FWHT along axis 0 of ``x`` (m power of two, any m)."""
+    interpret = interpret_default() if interpret is None else interpret
+    m, n = x.shape
+    if m & (m - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {m}")
+    if m <= MAX_SLAB_M:
+        return _slab_fwht(x, bn, True, interpret)
+    # Four-step split: m = m1 * m2, both powers of two, m2 maximal slab.
+    m2 = MAX_SLAB_M
+    m1 = m // m2
+    y = x.reshape(m1, m2, n)
+    # FWHT over m2: put m2 on axis 0 => (m2, m1 * n) slabs.
+    y = _slab_fwht(y.transpose(1, 0, 2).reshape(m2, m1 * n), bn, False, interpret)
+    y = y.reshape(m2, m1, n)
+    # FWHT over m1: (m1, m2 * n) slabs.
+    y = _slab_fwht(y.transpose(1, 0, 2).reshape(m1, m2 * n), bn, False, interpret)
+    y = y.reshape(m1, m2, n).reshape(m, n)
+    return y * jnp.asarray(1.0 / math.sqrt(m), x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def srht(signs: jax.Array, a: jax.Array, rows: jax.Array, *, bn: int = 128,
+         interpret: bool | None = None) -> jax.Array:
+    """Subsampled randomized Hadamard transform of ``a`` (m x n).
+
+    ``signs``: (m,) +-1 diagonal; ``rows``: (l,) int32 sample indices into
+    the padded row space.  Returns (l, n).
+    """
+    m, _ = a.shape
+    mp = 1 << max(0, (m - 1)).bit_length()
+    da = signs[:, None] * a
+    if mp != m:
+        da = jnp.pad(da, ((0, mp - m), (0, 0)))
+    h = fwht(da, bn=bn, interpret=interpret)
+    l = rows.shape[0]
+    return h[rows] * jnp.asarray(math.sqrt(mp / l), a.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the blocked fast Walsh-Hadamard transform."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Orthonormal FWHT along axis 0; ``x.shape[0]`` a power of two."""
+    m = x.shape[0]
+    assert m & (m - 1) == 0, m
+    tail = x.shape[1:]
+    y = x
+    h = 1
+    while h < m:
+        y = y.reshape((m // (2 * h), 2, h) + tail)
+        y = jnp.stack([y[:, 0] + y[:, 1], y[:, 0] - y[:, 1]], axis=1)
+        y = y.reshape((m,) + tail)
+        h *= 2
+    return y * jnp.asarray(1.0 / math.sqrt(m), x.dtype)
+
+
+def srht_ref(signs: jax.Array, a: jax.Array, rows: jax.Array) -> jax.Array:
+    """Full SRHT: sign flip, FWHT, row subsample, variance rescale."""
+    m = a.shape[0]
+    l = rows.shape[0]
+    h = fwht_ref(signs[:, None] * a)
+    return h[rows] * jnp.asarray(math.sqrt(m / l), a.dtype)

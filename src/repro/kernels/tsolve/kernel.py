@@ -1,0 +1,79 @@
+"""Column-parallel blocked triangular solve kernel (paper eq. 10).
+
+The paper's R-factorization is the best-scaling phase on the XMT (>100x
+on 128 procs) precisely because every column of ``T`` solves
+independently.  The TPU translation keeps that structure: the grid walks
+column slabs of ``R2``; each step holds ``R1`` (k x k) plus one slab in
+VMEM and runs the back-substitution recurrence over rows IN BLOCKS, so
+the bulk of the work is (bk x k) @ (k x bn) MXU updates rather than
+scalar divides:
+
+  for row-block bi from bottom:
+      b     = R2[bi] - R1[bi, :] @ T          (MXU; T rows not yet solved are 0)
+      T[bi] = seq_back_substitute(R1[bi,bi], b)   (bk VPU steps over bn lanes)
+
+The diagonal-block recurrence is the only sequential part — bk rows per
+block, amortized across the bn-wide slab, exactly the paper's
+one-processor-per-column scheme with columns widened to TPU lanes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..common import acc_dtype_for, cdiv
+
+
+def _tsolve_kernel(r1_ref, r2_ref, t_ref, *, k: int, bk: int):
+    R1 = r1_ref[...]                      # (k, k), upper triangular
+    R2 = r2_ref[...]                      # (k, bn)
+    acc = acc_dtype_for(R1.dtype)
+    nblk = k // bk
+
+    def row_block(bi_, T):
+        bi = nblk - 1 - bi_               # bottom-up over row blocks
+        r0 = bi * bk
+        row_band = lax.dynamic_slice_in_dim(R1, r0, bk, axis=0)          # (bk, k)
+        # Rows of T at/above this block are still zero and columns of the
+        # band left of the diagonal are zero by triangularity, so this one
+        # GEMM is exactly the trailing update  R1[bi, bi+1:] @ T[bi+1:].
+        trailing = jnp.dot(row_band.astype(acc), T.astype(acc))          # (bk, bn)
+        b = lax.dynamic_slice_in_dim(R2, r0, bk, axis=0).astype(acc) - trailing
+        diag_blk = lax.dynamic_slice(R1, (r0, r0), (bk, bk)).astype(acc)
+
+        def row(i_, tb):                  # sequential within the diagonal block
+            i = bk - 1 - i_
+            rrow = lax.dynamic_slice_in_dim(diag_blk, i, 1, axis=0)[0]   # (bk,)
+            dot = jnp.dot(rrow, tb)                                      # (bn,)
+            rhs_i = lax.dynamic_slice_in_dim(b, i, 1, axis=0)[0]
+            ti = (rhs_i - dot) / rrow[i]
+            return lax.dynamic_update_slice_in_dim(tb, ti[None, :], i, axis=0)
+
+        tb = lax.fori_loop(0, bk, row, jnp.zeros_like(b))
+        return lax.dynamic_update_slice_in_dim(T, tb.astype(T.dtype), r0, axis=0)
+
+    t_ref[...] = lax.fori_loop(0, nblk, row_block, jnp.zeros_like(R2))
+
+
+def tsolve_kernel(r1: jax.Array, r2: jax.Array, *, bn: int = 128, bk: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """Raw pallas_call.  Pre-padded: bk | k (pad diagonal non-singular), bn | n;
+    ``r1`` must already be upper triangular."""
+    k, k2 = r1.shape
+    k3, n = r2.shape
+    assert k == k2 == k3 and k % bk == 0 and n % bn == 0, (r1.shape, r2.shape, bk, bn)
+    return pl.pallas_call(
+        partial(_tsolve_kernel, k=k, bk=bk),
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((k, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), r2.dtype),
+        interpret=interpret,
+    )(r1, r2)

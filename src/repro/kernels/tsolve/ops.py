@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the blocked triangular solve kernel.
+
+Pads ``k`` to a block multiple with an identity diagonal (keeps the
+padded system non-singular and the true solution untouched) and ``n`` to
+slab multiples.  Complex inputs fall back to XLA's TriangularSolve — the
+TPU production path is real (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import tsolve_kernel
+
+__all__ = ["tsolve"]
+
+
+@partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def tsolve(r1: jax.Array, r2: jax.Array, *, bn: int = 128, bk: int = 128,
+           interpret: bool | None = None) -> jax.Array:
+    """Solve ``triu(r1) @ T = r2``; r1 (k x k), r2 (k x n) -> T (k x n)."""
+    interpret = interpret_default() if interpret is None else interpret
+    if jnp.issubdtype(r1.dtype, jnp.complexfloating) or \
+            jnp.issubdtype(r2.dtype, jnp.complexfloating):
+        return jax.scipy.linalg.solve_triangular(jnp.triu(r1), r2, lower=False)
+    k, n = r2.shape
+    kp, np_ = round_up(k, bk), round_up(n, bn)
+    r1p = pad_to(jnp.triu(r1), (kp, kp))
+    if kp != k:  # identity diagonal on the pad keeps the system non-singular
+        idx = jnp.arange(k, kp)
+        r1p = r1p.at[idx, idx].set(jnp.ones((), r1.dtype))
+    r2p = pad_to(r2, (kp, np_))
+    out = tsolve_kernel(r1p, r2p, bn=bn, bk=bk, interpret=interpret)
+    return out[:k, :n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the blocked triangular interpolation solve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tsolve_ref(r1: jax.Array, r2: jax.Array) -> jax.Array:
+    """Solve ``triu(r1) @ T = r2`` column-wise (paper eq. 10)."""
+    return jax.scipy.linalg.solve_triangular(jnp.triu(r1), r2, lower=False)

@@ -1,0 +1,1 @@
+"""Launcher: production meshes, sharding rules, step builders, dry-run."""

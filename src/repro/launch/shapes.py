@@ -1,0 +1,73 @@
+"""The assigned input-shape grid and ShapeDtypeStruct stand-ins.
+
+  train_4k      seq=4,096   global_batch=256   -> train_step
+  prefill_32k   seq=32,768  global_batch=32    -> prefill (serve)
+  decode_32k    seq=32,768  global_batch=128   -> decode_step, KV len 32k
+  long_500k     seq=524,288 global_batch=1     -> decode_step, KV len 500k
+                 (sub-quadratic archs only — SWA / SSM / hybrid)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs: shardable,
+lowerable, never allocated (the dry-run contract).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import caches_shape
+
+
+class ShapeCase(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason).  long_500k needs sub-quadratic decode state."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention decode state at 500k context is "
+                       "quadratic-cost / O(S) KV — skipped per assignment "
+                       "(sub-quadratic archs only)")
+    return True, ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    case = SHAPES[shape]
+    B, S = case.global_batch, case.seq_len
+    tok = jnp.int32
+    if case.kind == "train":
+        d = {"tokens": sds((B, S), tok), "labels": sds((B, S), tok)}
+        if cfg.encdec:
+            d["frames"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                              jnp.bfloat16)
+        return d
+    if case.kind == "prefill":
+        d = {"tokens": sds((B, S), tok)}
+        if cfg.encdec:
+            d["frames"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                              jnp.bfloat16)
+        return d
+    # decode: one new token against a cache of S; per-sequence positions
+    caches = jax.tree.map(
+        lambda l: sds(l.shape, l.dtype), caches_shape(cfg, B, S))
+    return {"tokens": sds((B, 1), tok),
+            "pos": sds((B,), jnp.int32),
+            "caches": caches}

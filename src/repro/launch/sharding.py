@@ -1,0 +1,257 @@
+"""PartitionSpec rules: parameter, activation and cache shardings.
+
+Logical layout (DESIGN.md section 3):
+  * ``model``  — tensor parallelism: attention heads / d_ff / experts /
+                 d_inner; vocab dim of the embedding and LM head.
+  * ``data``   — FSDP: the non-TP dim of every large weight (so optimizer
+                 state is ZeRO-sharded for free); batch dim of activations.
+  * ``pod``    — pure DP between pods (gradients mean-reduced, optionally
+                 RandLR-compressed); params replicated across pods.
+
+Rules are keyed on (parent-key, leaf-key) path suffixes and applied to the
+TRAILING dims of each leaf, so the same table covers plain and
+superblock-STACKED (leading ``n_super``) parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.attention import KVCache
+from ..models.config import ModelConfig
+from ..models.mamba import MambaState
+from ..models.xlstm import MLSTMState, SLSTMState
+from .mesh import dp_axes, model_axis_size
+
+# (parent_match, name) -> trailing-dim axes; None entries replicate a dim.
+# "F" = fsdp axis ("data"), "T" = tensor axis ("model"), "E" = expert axis.
+_RULES: list[tuple[Optional[str], str, tuple[Optional[str], ...]]] = [
+    ("embed", "tok", ("T", "F")),
+    (None, "lm_head", ("F", "T")),
+    (None, "pos", (None, None)),
+    ("frontend", "proj", ("F", "T")),
+    ("frontend", "merger", ("F", "T")),
+    # attention
+    (None, "wq", ("F", "T")),
+    (None, "wk", ("F", "T")),
+    (None, "wv", ("F", "T")),
+    (None, "wo", ("T", "F")),
+    (None, "bq", ("T",)),
+    (None, "bk", ("T",)),
+    (None, "bv", ("T",)),
+    # dense mlp / whisper / slstm projections
+    ("moe", "router", ("F", None)),
+    ("moe", "w_gate", ("E", "F", "Tmoe")),
+    ("moe", "w_up", ("E", "F", "Tmoe")),
+    ("moe", "w_down", ("E", "Tmoe", "F")),
+    ("moe", "shared_gate", ("F", None)),
+    (None, "w_gate", ("F", "T")),
+    (None, "w_up", ("F", "T")),
+    (None, "w_down", ("T", "F")),
+    (None, "w_in", ("F", "T")),
+    (None, "b_in", ("T",)),
+    (None, "w_out", ("T", "F")),
+    (None, "b_out", (None,)),
+    # mamba
+    (None, "in_proj", ("F", "T")),
+    (None, "conv_w", (None, "T")),
+    (None, "conv_b", ("T",)),
+    (None, "x_proj", ("T", None)),
+    (None, "dt_proj", (None, "T")),
+    (None, "dt_bias", ("T",)),
+    (None, "A_log", ("T", None)),
+    (None, "D", ("T",)),
+    (None, "out_proj", ("T", "F")),
+    # mlstm
+    (None, "up_proj", ("F", "T")),
+    (None, "down_proj", ("T", "F")),
+    (None, "cq", ("T", None)),
+    (None, "ck", ("T", None)),
+    (None, "cv", ("T", None)),
+    (None, "w_igate", ("T", None)),
+    (None, "w_fgate", ("T", None)),
+]
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for e in path:
+        if hasattr(e, "key"):
+            out.append(str(e.key))
+    return out
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        out = 1
+        for a in ax:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[ax]
+
+
+def _spec_for(path, leaf, cfg: ModelConfig, mesh: Mesh,
+              mode: str = "tp") -> P:
+    """``mode``:
+      * "tp"   — Megatron TP over `model` + FSDP over `data` (default).
+      * "fsdp" — pure ZeRO-3: every large dim sharded over (data, model),
+        no tensor parallelism.  Wins when the per-chip model slice is so
+        small that TP activation psums dwarf compute (granite-2b class;
+        see EXPERIMENTS.md section Perf) and sidesteps head-divisibility.
+    """
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    ep_mode = cfg.moe and cfg.n_experts % model_axis_size(mesh) == 0
+    if mode == "fsdp":
+        # ZeRO-3: shard the largest divisible dim of every big leaf over
+        # ALL device axes; small leaves replicate.
+        fsdp_axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+        n = _axis_size(mesh, fsdp_axes)
+        import math as _math
+        if leaf.ndim == 0 or _math.prod(leaf.shape) < (1 << 16):
+            return P()
+        dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in dims:
+            if leaf.shape[i] % n == 0:
+                spec = [None] * leaf.ndim
+                spec[i] = fsdp_axes
+                return P(*spec)
+        return P()
+    for pmatch, nmatch, axes in _RULES:
+        if nmatch != name:
+            continue
+        if pmatch is not None and pmatch not in keys:
+            continue
+        trans = []
+        for a in axes:
+            if a == "F":
+                trans.append("data" if "data" in mesh.axis_names else None)
+            elif a == "T":
+                trans.append("model" if "model" in mesh.axis_names else None)
+            elif a == "E":      # expert dim: sharded under EP, replicated under TP-MoE
+                trans.append("model" if ep_mode else None)
+            elif a == "Tmoe":   # expert hidden dim: sharded under TP-MoE
+                trans.append(None if ep_mode else "model")
+            else:
+                trans.append(None)
+        nd = leaf.ndim
+        if len(trans) > nd:
+            trans = trans[-nd:]
+        lead = (None,) * (nd - len(trans))
+        spec = lead + tuple(trans)
+        # Drop axes that do not divide the dim (e.g. 28 heads on model=16).
+        fixed = tuple(
+            ax if (ax is None or leaf.shape[i] % _axis_size(mesh, ax) == 0)
+            else None
+            for i, ax in enumerate(spec))
+        return P(*fixed)
+    return P()      # replicate by default (norm scales, biases, gates)
+
+
+def param_specs(cfg: ModelConfig, params_or_shapes, mesh: Mesh,
+                mode: str = "tp") -> Any:
+    """PartitionSpec pytree matching the parameter tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, cfg, mesh, mode),
+        params_or_shapes)
+
+
+def param_shardings(cfg: ModelConfig, params_or_shapes, mesh: Mesh,
+                    mode: str = "tp") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params_or_shapes, mesh, mode))
+
+
+# -------------------------------------------------------------- activations
+
+def batch_spec(mesh: Mesh, global_batch: int, mode: str = "tp") -> P:
+    """Batch-dim sharding: over ("pod","data") when divisible, else fewer.
+    In fsdp mode the (otherwise idle) model axis joins the batch axes."""
+    axes = [a for a in dp_axes(mesh)]
+    if mode == "fsdp" and "model" in mesh.axis_names:
+        axes = axes + ["model"]
+    import math
+    while axes and global_batch % math.prod(mesh.shape[a] for a in axes):
+        axes = axes[1:]     # drop the pod axis first, then data
+    return P(tuple(axes) if axes else None)
+
+
+def train_batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                      mode: str = "tp") -> dict:
+    b = batch_spec(mesh, global_batch, mode)
+    specs = {"tokens": P(b[0], None), "labels": P(b[0], None)}
+    if cfg.encdec:
+        specs["frames"] = P(b[0], None, None)
+    return specs
+
+
+# ------------------------------------------------------------------ caches
+
+def cache_specs(cfg: ModelConfig, caches_shape, mesh: Mesh, batch: int) -> Any:
+    """Shardings for the decode caches.
+
+    KV caches: batch over the dp axes when divisible; the SEQUENCE dim over
+    ``model`` (works for any kv-head count, incl. kv=4 on a 16-wide axis —
+    softmax stats are psum'd by GSPMD); when the batch cannot shard
+    (long_500k, B=1) the sequence takes the dp axes too.
+    SSM/xLSTM states: batch over dp, feature (d_inner / head-dim) over
+    ``model``.
+    """
+    bspec = batch_spec(mesh, batch)
+    b_ax = bspec[0]
+    seq_ax: Any = "model"
+    if b_ax is None:
+        rest = tuple(dp_axes(mesh))
+        seq_ax = rest + ("model",)
+
+    def kv_spec(leaf):
+        # (n_super, B, L, KV, hd)
+        L = leaf.shape[2]
+        import math
+        n_seq = (math.prod(mesh.shape[a] for a in seq_ax) if isinstance(seq_ax, tuple)
+                 else mesh.shape[seq_ax])
+        seq = seq_ax if L % n_seq == 0 else None
+        return P(None, b_ax, seq, None, None)
+
+    def generic(leaf, feature_axes: dict[int, str]):
+        spec: list = [None] * leaf.ndim
+        spec[1] = b_ax
+        for dim, ax in feature_axes.items():
+            if leaf.shape[dim] % mesh.shape[ax] == 0:
+                spec[dim] = ax
+        return P(*spec)
+
+    def one(cache):
+        if isinstance(cache, KVCache):
+            return KVCache(k=kv_spec(cache.k), v=kv_spec(cache.v))
+        if isinstance(cache, MambaState):
+            return MambaState(conv=generic(cache.conv, {3: "model"}),
+                              ssm=generic(cache.ssm, {2: "model"}))
+        if isinstance(cache, MLSTMState):
+            return MLSTMState(C=generic(cache.C, {3: "model"}),
+                              n=generic(cache.n, {3: "model"}),
+                              m=generic(cache.m, {}),
+                              conv=generic(cache.conv, {3: "model"}))
+        if isinstance(cache, SLSTMState):
+            return SLSTMState(**{f: generic(getattr(cache, f), {3: "model"})
+                                 for f in ("c", "n", "h", "m")})
+        if isinstance(cache, tuple):    # whisper cross-attn (k, v) pair
+            return tuple(P(None, b_ax, None, None, None) for _ in cache)
+        raise TypeError(type(cache))
+
+    is_state = lambda x: isinstance(x, (KVCache, MambaState, MLSTMState,
+                                        SLSTMState)) or (
+        isinstance(x, tuple) and not isinstance(x, (KVCache,)) and
+        len(x) == 2 and all(hasattr(e, "shape") for e in x))
+    return jax.tree.map(one, caches_shape, is_leaf=is_state)
+
+
+def cache_shardings(cfg: ModelConfig, caches_shape, mesh: Mesh, batch: int):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cfg, caches_shape, mesh, batch),
+                        is_leaf=lambda x: isinstance(x, P))

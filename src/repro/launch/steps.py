@@ -1,0 +1,238 @@
+"""Step-function builders: ``train_step`` / ``prefill`` / ``decode_step``
+with explicit in/out shardings — the objects the dry-run lowers and the
+real drivers execute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step as model_decode
+from ..models.transformer import loss_fn
+from ..models.transformer import prefill as model_prefill
+from ..optim import (AdamWState, CompressorConfig, adamw_init, adamw_update,
+                     clip_by_global_norm, compress_grads, ef_init,
+                     warmup_cosine)
+from .mesh import dp_axes
+from .sharding import (batch_spec, cache_shardings, param_shardings,
+                       train_batch_specs)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any                    # error-feedback buffers (scalar placeholders
+                               # when compression is off)
+    step: jax.Array
+
+
+class TrainConfig(NamedTuple):
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    max_grad_norm: float = 1.0
+    weight_decay: float = 0.1
+    compress: Optional[CompressorConfig] = None
+    sharding_mode: str = "tp"          # "tp" (Megatron TP+FSDP) | "fsdp" (ZeRO-3)
+    cast_params: bool = False          # pre-cast big f32 weights to compute
+                                       # dtype so FSDP all-gathers move bf16
+                                       # (bit-identical math: the model casts
+                                       # at every use site anyway)
+
+
+# Leaves the model deliberately consumes in f32 (routing/SSM numerics) —
+# never pre-cast these.
+_KEEP_F32 = {"router", "A_log", "dt_bias", "D", "b_in",
+             "w_igate", "w_fgate", "b_igate", "b_fgate"}
+
+
+def _cast_params_for_compute(params, cfg: ModelConfig, pspecs=None):
+    """Cast big f32 weights to the compute dtype, PINNED to their sharded
+    layout — without the constraint GSPMD all-gathers the f32 master and
+    converts afterwards, moving 2x the bytes (measured: granite fsdp
+    gathers stayed f32[2048,8192] until this pin; EXPERIMENTS.md G3)."""
+    from ..models.pshard import current_mesh
+    mesh = current_mesh()
+
+    def leaf(path, p, spec=None):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if (p.ndim >= 2 and p.dtype == jnp.float32
+                and name not in _KEEP_F32 and p.size >= (1 << 16)):
+            c = p.astype(cfg.compute_dtype)
+            if mesh is not None and spec is not None:
+                c = jax.lax.with_sharding_constraint(c, spec)
+            return c
+        return p
+
+    if pspecs is None:
+        return jax.tree_util.tree_map_with_path(leaf, params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, p, s: leaf(path, p, s), params, pspecs)
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig, tcfg: TrainConfig,
+                     npods: int = 1) -> TrainState:
+    from ..models.transformer import init_params
+    params = init_params(key, cfg)
+    ccfg = tcfg.compress or CompressorConfig()
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        ef=(ef_init(params, ccfg, npods) if tcfg.compress and npods > 1
+            else jax.tree.map(lambda _: jnp.zeros((), jnp.float32), params)),
+        step=jnp.zeros((), jnp.int32))
+
+
+def train_state_shape(cfg: ModelConfig, tcfg: TrainConfig, npods: int = 1):
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg, npods), jax.random.key(0))
+
+
+def train_state_shardings(cfg: ModelConfig, state_shape, mesh: Mesh,
+                          mode: str = "tp"):
+    """Param shardings extend to optimizer moments and EF buffers (which
+    carry a leading pod axis -> sharded over ``pod``)."""
+    pshard = param_shardings(cfg, state_shape.params, mesh, mode)
+    pspec = jax.tree.map(lambda s: s.spec, pshard)
+
+    def ef_shard(spec, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        lead = ("pod",) if "pod" in mesh.axis_names else (None,)
+        return NamedSharding(mesh, P(*(lead + tuple(spec))))
+
+    return TrainState(
+        params=pshard,
+        opt=AdamWState(mu=pshard, nu=pshard,
+                       count=NamedSharding(mesh, P())),
+        ef=jax.tree.map(ef_shard, pspec, state_shape.ef),
+        step=NamedSharding(mesh, P()))
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                    global_batch: int, pspecs=None):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    With ``tcfg.compress`` set and a multi-pod mesh, gradients are computed
+    PER POD (vmap over a leading pod axis on the batch) and mean-reduced
+    through the RandLR low-rank path — the paper's decomposition as the
+    inter-pod gradient collective (optim/compress.py).
+    """
+    npods = mesh.shape.get("pod", 1)
+    use_compress = tcfg.compress is not None and npods > 1
+    bspec = batch_spec(mesh, global_batch, tcfg.sharding_mode)
+
+    def apply_updates(state, grads, metrics):
+        grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr = warmup_cosine(state.step, peak_lr=tcfg.peak_lr,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr,
+                                   weight_decay=tcfg.weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt, metrics
+
+    from ..models.pshard import dp_axes as _dp_ctx
+    act_axes = (("pod", "data", "model") if tcfg.sharding_mode == "fsdp"
+                else ("pod", "data"))
+
+    def loss_of(p, b):
+        if tcfg.cast_params:
+            p = _cast_params_for_compute(p, cfg, pspecs)
+        return loss_fn(p, cfg, b)
+
+    if not use_compress:
+        def train_step(state: TrainState, batch: dict):
+            with _dp_ctx(act_axes):
+                (_, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_of(p, batch), has_aux=True)(state.params)
+            params, opt, metrics = apply_updates(state, grads, metrics)
+            return TrainState(params, opt, state.ef, state.step + 1), metrics
+        return train_step
+
+    def train_step(state: TrainState, batch: dict):
+        # Split the global batch over pods: leading axis `npods` stays
+        # sharded over "pod", so per-pod grads live pod-local.
+        def per_pod(b):
+            return jax.tree.map(
+                lambda t: t.reshape((npods, t.shape[0] // npods) + t.shape[1:]),
+                b)
+        pod_batch = per_pod(batch)
+        from ..models.pshard import dp_axes as _dp_axes
+        inner_axes = tuple(a for a in act_axes if a != "pod")
+        with _dp_axes(inner_axes):    # inside the pod-vmap: no pod axis
+            (_, metrics), grads_pp = jax.vmap(
+                lambda b: jax.value_and_grad(
+                    lambda p: loss_of(p, b), has_aux=True)(state.params),
+            )(pod_batch)
+        metrics = jax.tree.map(lambda x: x.mean(0), metrics)
+        key = jax.random.fold_in(jax.random.key(0), state.step)
+        grads, ef, cstats = compress_grads(key, grads_pp, state.ef,
+                                           tcfg.compress)
+        params, opt, metrics = apply_updates(state, grads, metrics)
+        metrics["compress_ratio"] = jnp.asarray(cstats["ratio"], jnp.float32)
+        return TrainState(params, opt, ef, state.step + 1), metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                   global_batch: int, state_shape=None):
+    """jit-wrapped train_step with explicit in/out shardings (dry-run entry)."""
+    state_shape = state_shape or train_state_shape(
+        cfg, tcfg, mesh.shape.get("pod", 1))
+    st_shard = train_state_shardings(cfg, state_shape, mesh,
+                                     tcfg.sharding_mode)
+    bspecs = train_batch_specs(cfg, mesh, global_batch, tcfg.sharding_mode)
+    b_shard = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
+    from .sharding import param_specs
+    pspecs = param_specs(cfg, state_shape.params, mesh, tcfg.sharding_mode)
+    fn = make_train_step(cfg, tcfg, mesh, global_batch, pspecs)
+    return jax.jit(fn, in_shardings=(st_shard, b_shard),
+                   out_shardings=(st_shard, None)), state_shape, st_shard, b_shard
+
+
+# ------------------------------------------------------------------ serving
+
+def jit_prefill(cfg: ModelConfig, mesh: Mesh, global_batch: int, seq_len: int):
+    from ..models.transformer import caches_shape, init_params
+    bspec = batch_spec(mesh, global_batch)
+    b_ax = bspec[0]
+    pshard = param_shardings(cfg, jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.key(0)), mesh)
+    in_b = {"tokens": NamedSharding(mesh, P(b_ax, None))}
+    if cfg.encdec:
+        in_b["frames"] = NamedSharding(mesh, P(b_ax, None, None))
+    c_shape = caches_shape(cfg, global_batch, seq_len)
+    c_shard = cache_shardings(cfg, c_shape, mesh, global_batch)
+    fn = lambda params, batch: model_prefill(
+        params, cfg, batch["tokens"], max_len=seq_len,
+        frames=batch.get("frames"))
+    return jax.jit(fn, in_shardings=(pshard, in_b),
+                   out_shardings=(NamedSharding(mesh, P(b_ax, None, "model")),
+                                  c_shard)), pshard, in_b, c_shard
+
+
+def jit_decode_step(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                    seq_len: int):
+    from ..models.transformer import caches_shape, init_params
+    bspec = batch_spec(mesh, global_batch)
+    b_ax = bspec[0]
+    pshard = param_shardings(cfg, jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.key(0)), mesh)
+    c_shape = caches_shape(cfg, global_batch, seq_len)
+    c_shard = cache_shardings(cfg, c_shape, mesh, global_batch)
+    tok_shard = NamedSharding(mesh, P(b_ax, None))
+    pos_shard = NamedSharding(mesh, P(b_ax))
+    fn = lambda params, tokens, pos, caches: model_decode(
+        params, cfg, tokens, pos, caches)
+    return jax.jit(
+        fn, in_shardings=(pshard, tok_shard, pos_shard, c_shard),
+        out_shardings=(NamedSharding(mesh, P(b_ax, None, "model")), c_shard),
+    ), pshard, c_shard

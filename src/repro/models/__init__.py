@@ -1,0 +1,11 @@
+"""Model zoo: one composable LM covering the ten assigned architectures."""
+from .config import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from .transformer import (decode_step, forward, init_caches, init_params,
+                          loss_fn, params_shape, pattern, pattern_period,
+                          prefill)
+
+__all__ = [
+    "ModelConfig", "ATTN", "MAMBA", "MLSTM", "SLSTM",
+    "init_params", "params_shape", "forward", "loss_fn",
+    "prefill", "decode_step", "init_caches", "pattern", "pattern_period",
+]

@@ -1,0 +1,363 @@
+"""Grouped-query attention with the assigned archs' variants:
+
+  * GQA with arbitrary (n_heads, n_kv_heads) — grouped einsum, no KV
+    materialized repeat (keeps HBM traffic at the GQA ratio).
+  * qk-norm (qwen3), QKV bias (qwen2), sliding window (h2o-danube).
+  * causal / non-causal (whisper encoder), cross-attention (whisper dec).
+  * decode path against a pre-allocated KV cache (one token per step).
+
+Everything is einsum + explicit masks so GSPMD can shard heads over the
+``model`` mesh axis from the parameter PartitionSpecs alone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .norms import rmsnorm, rmsnorm_init
+from .rope import apply_rope
+
+NEG_INF = -1e9
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, L, KV, hd)
+    v: jax.Array           # (B, L, KV, hd)
+
+
+def attention_init(key: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    kq, kk, kvk, ko = jax.random.split(key, 4)
+    scale = d ** -0.5
+    pdt = cfg.params_dtype
+    p = {
+        "wq": (jax.random.normal(kq, (d, h * hd)) * scale).astype(pdt),
+        "wk": (jax.random.normal(kk, (d, kv * hd)) * scale).astype(pdt),
+        "wv": (jax.random.normal(kvk, (d, kv * hd)) * scale).astype(pdt),
+        "wo": (jax.random.normal(ko, (h * hd, d)) * (h * hd) ** -0.5).astype(pdt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), pdt)
+        p["bk"] = jnp.zeros((kv * hd,), pdt)
+        p["bv"] = jnp.zeros((kv * hd,), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, pdt)
+        p["k_norm"] = rmsnorm_init(hd, pdt)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, xq: jax.Array, xkv: jax.Array):
+    """Returns q (B,S,H,hd), k/v (B,T,KV,hd)."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cdt = cfg.compute_dtype
+    q = xq @ p["wq"].astype(cdt)
+    k = xkv @ p["wk"].astype(cdt)
+    v = xkv @ p["wv"].astype(cdt)
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(q.shape[:-1] + (h, hd))
+    k = k.reshape(k.shape[:-1] + (kv, hd))
+    v = v.reshape(v.shape[:-1] + (kv, hd))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B,S,H,hd) x (B,T,KV,hd) -> (B,KV,G,S,T) without repeating KV."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k)
+    return scores * (hd ** -0.5)
+
+
+def _gqa_out(weights: jax.Array, v: jax.Array) -> jax.Array:
+    """(B,KV,G,S,T) x (B,T,KV,hd) -> (B,S,H*hd)."""
+    b, kvh, g, s, _ = weights.shape
+    hd = v.shape[-1]
+    out = jnp.einsum("bkgst,btkh->bskgh", weights, v)
+    return out.reshape(b, s, kvh * g * hd)
+
+
+def _mask_full(s: int, t: int, *, causal: bool, window: Optional[int],
+               q_offset=0) -> jax.Array:
+    """(S, T) additive mask.  Query i sits at absolute position q_offset+i."""
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# Sequence length above which train/prefill attention switches to the
+# blockwise online-softmax path (never materializes S x T scores).
+BLOCKWISE_THRESHOLD = 2048
+BLOCK_KV = 1024
+
+
+def _block_mask(j: jax.Array, block: int, T: int, qpos: jax.Array,
+                causal: bool, window: Optional[int]) -> jax.Array:
+    kpos = (j * block + jnp.arange(block))[None, :]      # (1, blk)
+    ok = kpos < T
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window is not None:
+        ok = ok & (kpos > qpos - window)
+    return ok
+
+
+def _flash_fwd_scan(qf, kb, vb, *, T, block, causal, window):
+    """Online-softmax forward.  Returns (out (B,H,S,hd), L (B,H,S)) with
+    L = m + log(l) the per-row logsumexp."""
+    from .pshard import hint
+    B, H, S, hd = qf.shape[0], qf.shape[2], qf.shape[1], qf.shape[3]
+    qpos = jnp.arange(S)[:, None]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bshd,bthd->bhst", qf, kj.astype(jnp.float32))
+        ok = _block_mask(j, block, T, qpos, causal, window)
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        scale = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * scale + p_.sum(-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p_, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    nb = kb.shape[0]
+    m0 = hint(jnp.full((B, H, S), NEG_INF, jnp.float32), "dp", "model", None)
+    l0 = hint(jnp.zeros((B, H, S), jnp.float32), "dp", "model", None)
+    a0 = hint(jnp.zeros((B, H, S, hd), jnp.float32), "dp", "model", None, None)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (jnp.arange(nb), kb, vb))
+    lsafe = jnp.maximum(l, 1e-30)
+    out = acc / lsafe[..., None]
+    L = m + jnp.log(lsafe)
+    return out, L
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(qf, kb, vb, T, block, causal, window):
+    """FlashAttention with a hand-written VJP: the backward pass saves only
+    (out, logsumexp) and RECOMPUTES each probability block — without this,
+    differentiating the forward scan stacks every (B, H, S, block) p-block
+    as a residual (~17 GB/device at granite train_4k; see EXPERIMENTS.md
+    section Perf iteration log).
+
+    qf: (B, S, H, hd) pre-scaled queries; kb/vb: (nb, B, block, H, hd).
+    """
+    out, _ = _flash_fwd_scan(qf, kb, vb, T=T, block=block, causal=causal,
+                             window=window)
+    return out
+
+
+def _flash_fwd(qf, kb, vb, T, block, causal, window):
+    out, L = _flash_fwd_scan(qf, kb, vb, T=T, block=block, causal=causal,
+                             window=window)
+    return out, (qf, kb, vb, out, L)
+
+
+def _flash_bwd(T, block, causal, window, res, dout):
+    qf, kb, vb, out, L = res
+    B, S, H, hd = qf.shape
+    qpos = jnp.arange(S)[:, None]
+    # D_i = dout_i . out_i  (the softmax-jacobian diagonal term)
+    D = jnp.einsum("bhsd,bhsd->bhs", dout, out)
+
+    def step(dq, inp):
+        j, kj, vj = inp
+        kjf = kj.astype(jnp.float32)
+        vjf = vj.astype(jnp.float32)
+        s = jnp.einsum("bshd,bthd->bhst", qf, kjf)
+        ok = _block_mask(j, block, T, qpos, causal, window)
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        p = jnp.exp(s - L[..., None])                    # exact probs
+        dv = jnp.einsum("bhst,bhsd->bthd", p, dout)
+        dp = jnp.einsum("bhsd,bthd->bhst", dout, vjf)
+        ds = p * (dp - D[..., None])
+        dq = dq + jnp.einsum("bhst,bthd->bshd", ds, kjf)
+        dk = jnp.einsum("bhst,bshd->bthd", ds, qf)
+        return dq, (dk, dv)
+
+    nb = kb.shape[0]
+    dq0 = jnp.zeros_like(qf)
+    dq, (dk, dv) = lax.scan(step, dq0, (jnp.arange(nb), kb, vb))
+    return dq, dk.astype(kb.dtype), dv.astype(vb.dtype)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attention_blockwise(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool, window: Optional[int],
+                         block: int = BLOCK_KV) -> jax.Array:
+    """Flash-style attention: scan over KV blocks with online softmax.
+
+    q: (B, S, H, hd); k/v: (B, T, H, hd) — KV already repeated to full
+    heads so the head dim shards over ``model`` (the grouped-GQA einsum
+    would pin scores to batch-only sharding: 8 kv-heads cannot split a
+    16-wide axis).  Peak live scores: one (B, H, S, block) slab — at
+    prefill_32k ~0.5 GB/device on the pod mesh vs ~17 TB/device dense.
+
+    Mask-only causality: blocks entirely in the future still compute
+    (then zero out) — a known 2x flop overhead on the causal triangle,
+    flagged in EXPERIMENTS.md section Perf as the Pallas-flash hillclimb.
+    """
+    from .pshard import hint
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    nb = -(-T // block)
+    Tp = nb * block
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qf = hint(qf, "dp", None, "model", None)
+    kb = k.reshape(B, nb, block, H, hd).swapaxes(0, 1)  # (nb, B, blk, H, hd)
+    vb = v.reshape(B, nb, block, H, hd).swapaxes(0, 1)
+    kb = hint(kb, None, "dp", None, "model", None)
+    vb = hint(vb, None, "dp", None, "model", None)
+    out = _flash_attention(qf, kb, vb, T, block, causal, window)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array,
+              cos: Optional[jax.Array], sin: Optional[jax.Array], *,
+              causal: bool = True,
+              xattn_kv: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill).  ``xattn_kv`` switches to
+    cross-attention against encoder states (no mask, no rope).  Long
+    sequences take the blockwise online-softmax path."""
+    cdt = cfg.compute_dtype
+    xkv = xattn_kv if xattn_kv is not None else x
+    q, k, v = _project_qkv(p, cfg, x, xkv)
+    if xattn_kv is None and cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    T = k.shape[1]
+    if T > BLOCKWISE_THRESHOLD:
+        g = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k, g, axis=2)                   # KV -> H heads
+        vr = jnp.repeat(v, g, axis=2)
+        # Mesh-aware head padding: when H does not divide the `model`
+        # axis (qwen2: 28H, qwen2-vl: 12H on a 16-wide axis) GSPMD cannot
+        # shard the head dim and falls back to replicated scores +
+        # resharding storms (~5 TB/device/step measured on qwen2 train —
+        # EXPERIMENTS.md Q1).  Zero heads are exact: q=k=v=0 gives
+        # uniform-softmax x zero values = zero output, sliced off below.
+        from .pshard import current_mesh
+        mesh = current_mesh()
+        H = q.shape[2]
+        Hp = H
+        if mesh is not None and "model" in mesh.axis_names:
+            ms = mesh.shape["model"]
+            if H % ms:
+                Hp = -(-H // ms) * ms
+                padh = ((0, 0), (0, 0), (0, Hp - H), (0, 0))
+                q = jnp.pad(q, padh)
+                kr = jnp.pad(kr, padh)
+                vr = jnp.pad(vr, padh)
+        out = _attention_blockwise(
+            q, kr, vr, causal=causal and xattn_kv is None,
+            window=cfg.sliding_window if xattn_kv is None else None)
+        if Hp != H:
+            out = out[..., :H * cfg.hd]
+        return out.astype(cdt) @ p["wo"].astype(cdt)
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+    if xattn_kv is None:
+        mask = _mask_full(q.shape[1], k.shape[1], causal=causal,
+                          window=cfg.sliding_window)
+        scores = scores + mask[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = _gqa_out(w, v)
+    return out @ p["wo"].astype(cdt)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    """Decode cache.  SWA archs cap the cache at the window size — the
+    sub-quadratic property that qualifies them for long_500k."""
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window)
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, cfg.compute_dtype),
+                   v=jnp.zeros(shape, cfg.compute_dtype))
+
+
+def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                     cache: KVCache,
+                     cos: Optional[jax.Array], sin: Optional[jax.Array],
+                     ) -> tuple[jax.Array, KVCache]:
+    """One decode step.  ``x``: (B, 1, d); ``pos``: (B,) absolute position
+    PER SEQUENCE (continuous batching: slots decode at different depths).
+
+    With a sliding window the cache is a ring buffer of size ``window``;
+    masking handles both the not-yet-filled and the wrapped cases.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    L = cache.k.shape[1]
+    slot = pos if cfg.sliding_window is None else pos % L   # (B,)
+    rows = jnp.arange(B)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)     # (B,KV,G,1,L)
+    kpos = jnp.arange(L)[None, :]                           # (1, L)
+    posb = pos[:, None]                                     # (B, 1)
+    if cfg.sliding_window is None:
+        ok = kpos <= posb
+    else:
+        # Ring buffer of size L == min(window, max_len): slot s currently
+        # holds absolute position  a = pos - ((pos - s) mod L) , which is
+        # always within the window; it is only invalid when nothing has
+        # been written there yet (a < 0).
+        ok = (posb - kpos) % L <= posb
+    scores = scores + jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(cfg.compute_dtype)
+    out = _gqa_out(w, v)
+    return out @ p["wo"].astype(cfg.compute_dtype), KVCache(k=k, v=v)
+
+
+def cross_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                           enc_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V (whisper)."""
+    k, v = enc_kv
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cdt = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cdt)).reshape(x.shape[0], x.shape[1], h, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = _gqa_out(w, v)
+    return out @ p["wo"].astype(cdt)
+
+
+def encoder_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
+    """Precompute cross-attention K/V once per sequence (whisper decode)."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    cdt = cfg.compute_dtype
+    k = (enc_out @ p["wk"].astype(cdt)).reshape(enc_out.shape[0], -1, kv, hd)
+    v = (enc_out @ p["wv"].astype(cdt)).reshape(enc_out.shape[0], -1, kv, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return k, v

@@ -1,0 +1,163 @@
+"""Mamba-1 selective SSM mixer (jamba's non-attention layers).
+
+TPU adaptation (DESIGN.md section 2): the CUDA reference fuses the
+recurrence into a single kernel over SRAM; the TPU-native structure is a
+CHUNKED scan — within a chunk of Q tokens the elementwise linear
+recurrence
+
+    h_t = Abar_t * h_{t-1} + dt_t * B_t * x_t        (diagonal A)
+
+is solved with ``lax.associative_scan`` (log-depth, VPU-friendly), and a
+``lax.scan`` carries the (B, d_inner, d_state) state across chunks.  The
+per-chunk working set (B_chunk, Q, d_inner, d_state) is what bounds VMEM
+— Q=128 keeps it ~64 MB/device at jamba train_4k scale, vs. materializing
+the full (S, d_inner, d_state) tensor (17 GB/device) a naive
+associative-scan-over-S would need.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array     # (B, d_conv - 1, d_inner) rolling conv window
+    ssm: jax.Array      # (B, d_inner, d_state)
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, dI, dS, dc = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    pdt = cfg.params_dtype
+    # S4D-real initialization for A; dt bias ~ softplus^-1(uniform in [1e-3, 0.1]).
+    A = jnp.tile(jnp.arange(1, dS + 1, dtype=jnp.float32)[None, :], (dI, 1))
+    dt = jnp.exp(jax.random.uniform(ks[4], (dI,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * dI)) * d ** -0.5).astype(pdt),
+        "conv_w": (jax.random.normal(ks[1], (dc, dI)) * dc ** -0.5).astype(pdt),
+        "conv_b": jnp.zeros((dI,), pdt),
+        "x_proj": (jax.random.normal(ks[2], (dI, dt_rank + 2 * dS)) * dI ** -0.5).astype(pdt),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, dI)) * dt_rank ** -0.5).astype(pdt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),                       # (dI, dS) f32
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (dI, d)) * dI ** -0.5).astype(pdt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv along S.  x: (B, S, dI); w: (dc, dI).
+
+    ``history``: (B, dc-1, dI) previous tokens (decode), else zero-pad.
+    """
+    dc = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)     # (B, S+dc-1, dI)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dc))
+    return out + b[None, None]
+
+
+def _ssm_inputs(p: dict, cfg: ModelConfig, xc: jax.Array):
+    """Shared by train and decode: per-token (Abar, Bx, C) from conv'd xc."""
+    dS = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    dbc = xc.astype(jnp.float32) @ p["x_proj"].astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + dS], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                       # (dI, dS)
+    Abar = jnp.exp(dt[..., None] * A)                              # (..., dI, dS)
+    Bx = (dt * xc.astype(jnp.float32))[..., None] * Bc[..., None, :]
+    return Abar, Bx, Cc
+
+
+def _mamba_scan(p: dict, cfg: ModelConfig, x: jax.Array, chunk: int):
+    """Shared body: returns (out (B,S,d), final MambaState)."""
+    B, S, d = x.shape
+    dI = cfg.d_inner
+    cdt = cfg.compute_dtype
+    xz = x @ p["in_proj"].astype(cdt)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x1, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt)))
+
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    Abar, Bx, Cc = _ssm_inputs(p, cfg, xc)                         # (B,S,dI,dS)x2, (B,S,dS)
+
+    def chunk_step(h, inp):
+        Ab, bx, cc = inp                                           # (B,Q,dI,dS)...
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        Pt, St = lax.associative_scan(combine, (Ab, bx), axis=1)
+        hs = Pt * h[:, None] + St                                  # (B,Q,dI,dS)
+        y = jnp.einsum("bqds,bqs->bqd", hs, cc)
+        return hs[:, -1], y
+
+    from .pshard import hint
+    to_chunks = lambda t: t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+    # dI shards over `model`; the dS state dim stays local (it contracts
+    # in the y einsum — sharding it would psum every chunk).
+    Abar_c = hint(to_chunks(Abar), None, "dp", None, "model", None)
+    Bx_c = hint(to_chunks(Bx), None, "dp", None, "model", None)
+    Cc_c = hint(to_chunks(Cc), None, "dp", None, None)
+    h0 = hint(jnp.zeros((B, dI, cfg.mamba_d_state), jnp.float32),
+              "dp", "model", None)
+    h_last, ys = lax.scan(chunk_step, h0, (Abar_c, Bx_c, Cc_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, dI)
+    y = (y + p["D"][None, None] * xc.astype(jnp.float32)).astype(cdt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cdt)
+    dc = cfg.mamba_d_conv
+    conv_hist = x1[:, -(dc - 1):] if S >= dc - 1 else jnp.pad(
+        x1, ((0, 0), (dc - 1 - S, 0), (0, 0)))
+    return out, MambaState(conv=conv_hist.astype(cdt), ssm=h_last)
+
+
+def mamba_forward(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                  chunk: int = 128) -> jax.Array:
+    """Full-sequence mixer.  x: (B, S, d) -> (B, S, d)."""
+    return _mamba_scan(p, cfg, x, chunk)[0]
+
+
+def mamba_prefill(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                  chunk: int = 128) -> tuple[jax.Array, "MambaState"]:
+    """Forward over the prompt AND the O(1) decode state at its end."""
+    return _mamba_scan(p, cfg, x, chunk)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), cfg.compute_dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+    )
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: MambaState
+                 ) -> tuple[jax.Array, MambaState]:
+    """One token.  x: (B, 1, d).  O(1) state — the sub-quadratic property
+    that qualifies jamba/xlstm for long_500k."""
+    cdt = cfg.compute_dtype
+    xz = x @ p["in_proj"].astype(cdt)
+    x1, z = jnp.split(xz, 2, axis=-1)                              # (B,1,dI)
+    xc = jax.nn.silu(_causal_conv(x1, p["conv_w"].astype(cdt),
+                                  p["conv_b"].astype(cdt), history=state.conv))
+    new_conv = jnp.concatenate([state.conv[:, 1:], x1.astype(state.conv.dtype)], axis=1)
+    Abar, Bx, Cc = _ssm_inputs(p, cfg, xc)                         # (B,1,dI,dS)
+    h = Abar[:, 0] * state.ssm + Bx[:, 0]                          # (B,dI,dS)
+    y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])[:, None]
+    y = (y + p["D"][None, None] * xc.astype(jnp.float32)).astype(cdt)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cdt), MambaState(conv=new_conv, ssm=h)

@@ -1,0 +1,49 @@
+"""Feed-forward blocks: SwiGLU (llama-family archs) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def swiglu_init(key: jax.Array, d: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(kg, (d, d_ff)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ku, (d, d_ff)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(kd, (d_ff, d)) * d_ff ** -0.5).astype(dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array, cdt) -> jax.Array:
+    g = jax.nn.silu(x @ p["w_gate"].astype(cdt))
+    u = x @ p["w_up"].astype(cdt)
+    return (g * u) @ p["w_down"].astype(cdt)
+
+
+def gelu_mlp_init(key: jax.Array, d: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * d ** -0.5).astype(dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * d_ff ** -0.5).astype(dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array, cdt) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w_in"].astype(cdt) + p["b_in"].astype(cdt))
+    return h @ p["w_out"].astype(cdt) + p["b_out"].astype(cdt)
+
+
+def mlp_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    if cfg.encdec:   # whisper uses GELU MLPs
+        return gelu_mlp_init(key, cfg.d_model, cfg.d_ff, cfg.params_dtype)
+    return swiglu_init(key, cfg.d_model, cfg.d_ff, cfg.params_dtype)
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "w_in" in p:
+        return gelu_mlp(p, x, cfg.compute_dtype)
+    return swiglu(p, x, cfg.compute_dtype)

@@ -1,0 +1,154 @@
+"""Mixture-of-experts blocks (phi3.5-moe, qwen2-moe, jamba).
+
+Token-choice top-k routing with a fixed per-group capacity, realized as
+scatter/gather dispatch (no (N, E, C) one-hot einsum — the GShard mask
+tensor would be terabytes at train_4k scale).  Tokens are grouped
+(``G`` groups of ``s`` tokens); within a group each token's expert slot
+is its running count among same-expert tokens, and tokens past capacity
+are dropped (their gate mass is renormalized away, standard Switch
+behaviour).
+
+Expert parallelism: weights carry a leading ``E`` dim.  When the mesh's
+``model`` axis divides ``E`` (phi3.5, jamba: 16 experts) the launcher
+shards experts over ``model`` (EP — dispatch becomes an all-to-all).
+When it does not (qwen2-moe: 60 experts) the launcher shards the expert
+*hidden* dim over ``model`` (TP-MoE) — no padding experts, no dead
+compute; DESIGN.md section 3 records the rule.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .mlp import swiglu_init
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array     # scalar switch-style aux loss
+    dropped_fraction: jax.Array      # fraction of (token, k) slots dropped
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    kr, ke, ks = jax.random.split(key, 3)
+    pdt = cfg.params_dtype
+    p = {
+        "router": (jax.random.normal(kr, (d, E)) * d ** -0.5).astype(jnp.float32),
+        # Stacked expert SwiGLU weights, leading E dim (EP/TP shardable).
+        "w_gate": (jax.random.normal(ke, (E, d, f)) * d ** -0.5).astype(pdt),
+        "w_up": (jax.random.normal(jax.random.fold_in(ke, 1), (E, d, f)) * d ** -0.5).astype(pdt),
+        "w_down": (jax.random.normal(jax.random.fold_in(ke, 2), (E, f, d)) * f ** -0.5).astype(pdt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks, d, f * cfg.n_shared_experts, pdt)
+        p["shared_gate"] = (jax.random.normal(jax.random.fold_in(ks, 1), (d, 1)) * d ** -0.5
+                            ).astype(pdt)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    """Slots per expert per group; multiple of 8 for TPU sublane alignment."""
+    c = math.ceil(tokens_per_group * cfg.n_experts_active / cfg.n_experts
+                  * cfg.moe_capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_indices(expert_idx: jax.Array, E: int, capacity: int):
+    """Per-group slot assignment.  ``expert_idx``: (s*K,) int32 chosen experts
+    in token order.  Returns (slot, keep): slot[i] = running count of
+    expert_idx[i] among the first i entries; keep = slot < capacity."""
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)        # (sK, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                           # (sK, E)
+    slot = jnp.take_along_axis(pos, expert_idx[:, None], axis=1)[:, 0]
+    return slot, slot < capacity
+
+
+def _group_dispatch(x, gates, expert_idx, E, capacity):
+    """One group: scatter tokens to (E, C, d), later gathered back.
+
+    x: (s, d); gates: (s, K); expert_idx: (s, K) int32.
+    Returns (buf (E, C, d), e_flat, slot_flat, keep, gate_flat).
+    """
+    s, d = x.shape
+    K = gates.shape[1]
+    e_flat = expert_idx.reshape(s * K)
+    gate_flat = gates.reshape(s * K)
+    slot, keep = _dispatch_indices(e_flat, E, capacity)
+    x_rep = jnp.repeat(x, K, axis=0)                               # (sK, d)
+    w = jnp.where(keep, gate_flat, 0.0).astype(x.dtype)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    slot_c = jnp.minimum(slot, capacity - 1)
+    buf = buf.at[e_flat, slot_c].add(x_rep * jnp.where(keep, 1.0, 0.0
+                                                       ).astype(x.dtype)[:, None])
+    return buf, e_flat, slot_c, keep, w
+
+
+def _group_combine(buf_out, e_flat, slot_c, w, s, K):
+    """Gather expert outputs back to token order and mix by gate weight."""
+    y = buf_out[e_flat, slot_c]                                    # (sK, d)
+    y = y * w[:, None]
+    return y.reshape(s, K, -1).sum(axis=1)                         # (s, d)
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array, *,
+            group_size: Optional[int] = None) -> tuple[jax.Array, MoEAux]:
+    """Top-k routed SwiGLU experts.  ``x``: (B, S, d) -> same shape.
+
+    ``group_size``: tokens per dispatch group (defaults to S — one group
+    per batch row for training; decode callers pass the whole batch as a
+    single group so the capacity math stays tight at S=1).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.n_experts_active
+    cdt = cfg.compute_dtype
+    N = B * S
+    gs = S if group_size is None else group_size
+    gs = min(gs, N)
+    G = N // gs
+    assert G * gs == N, (B, S, gs)
+    xt = x.reshape(G, gs, d)
+
+    # Router in f32 for numerics (tiny matmul).
+    logits = xt.astype(jnp.float32) @ p["router"]                  # (G, s, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                         # (G, s, K)
+    gates = (top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)).astype(cdt)
+
+    capacity = moe_capacity(cfg, gs)
+    buf, e_flat, slot_c, keep, w = jax.vmap(
+        lambda xg, gg, ig: _group_dispatch(xg, gg, ig, E, capacity)
+    )(xt.astype(cdt), gates, top_i.astype(jnp.int32))              # buf: (G, E, C, d)
+    from .pshard import hint
+    # EP: experts over `model` (the dispatch reshard is the all-to-all);
+    # TP-MoE (E % model != 0): E replicated, expert hidden dim sharded.
+    buf = hint(buf, "dp", "model", None, None)
+
+    # Expert SwiGLU, batched over E (EP: E sharded; TP: f sharded).
+    wg, wu, wd = (p["w_gate"].astype(cdt), p["w_up"].astype(cdt),
+                  p["w_down"].astype(cdt))
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg))
+    u = jnp.einsum("gecd,edf->gecf", buf, wu)
+    buf_out = jnp.einsum("gecf,efd->gecd", g * u, wd)              # (G, E, C, d)
+
+    y = jax.vmap(lambda bo, ef, sc, wf: _group_combine(bo, ef, sc, wf, gs, K)
+                 )(buf_out, e_flat, slot_c, w)                     # (G, s, d)
+    y = y.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        from .mlp import swiglu
+        sh = swiglu(p["shared"], xt.reshape(N, d).astype(cdt), cdt)
+        if "shared_gate" in p:      # qwen2-moe gates its shared expert
+            sg = jax.nn.sigmoid(xt.reshape(N, d).astype(cdt) @ p["shared_gate"].astype(cdt))
+            sh = sh * sg
+        y = y + sh.reshape(B, S, d)
+
+    # Switch aux loss: E * sum_e (fraction of tokens -> e) * (mean prob of e).
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    ce = jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    lb = E * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, MoEAux(load_balance_loss=lb, dropped_fraction=dropped)

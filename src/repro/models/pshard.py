@@ -1,0 +1,82 @@
+"""Guarded sharding hints for model internals.
+
+``hint(x, axis_or_None, ...)`` lowers to ``with_sharding_constraint`` when
+a mesh context is active (the launcher's ``with mesh:``), and is a no-op
+otherwise (smoke tests / single device).  Axes that are absent from the
+mesh or do not divide the dim are dropped — one call site serves every
+mesh shape.
+
+Why this exists: GSPMD propagates shardings well through straight-line
+einsums but pins ``lax.scan`` carries to the (unsharded) init sharding —
+the blockwise-attention online-softmax carries and the MoE dispatch
+buffer otherwise end up REPLICATED, inflating per-device live memory by
+the data x model factor (135 GB/device observed on granite train_4k
+before these hints; see EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Union
+
+import jax
+from jax._src.mesh import thread_resources
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, tuple, None]
+
+# The axes a BATCH dim shards over.  Default: pod+data.  The RandLR
+# gradient-compression path vmaps over the pod axis, so inside its body
+# batch dims shard over "data" only — it narrows this contextvar while
+# tracing (launch/steps.py).
+_DP_AXES: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "dp_axes", default=("pod", "data"))
+
+
+@contextlib.contextmanager
+def dp_axes(axes: tuple):
+    tok = _DP_AXES.set(tuple(axes))
+    try:
+        yield
+    finally:
+        _DP_AXES.reset(tok)
+
+
+def current_mesh():
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def hint(x: jax.Array, *axes: Axis) -> jax.Array:
+    """Constrain ``x`` (ndim == len(axes)) when a mesh is active.
+
+    The token ``"dp"`` resolves to the current data-parallel axes
+    (("pod", "data") by default)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    axes = tuple(_DP_AXES.get() if a == "dp" else a for a in axes)
+    names = set(mesh.axis_names)
+    used: set = set()
+
+    def ok(dim: int, ax):
+        if ax is None:
+            return None
+        group = ax if isinstance(ax, tuple) else (ax,)
+        # an axis may appear once per spec — earlier (batch) slots win,
+        # e.g. fsdp mode routes `model` into the dp axes
+        group = tuple(a for a in group if a in names and a not in used)
+        if not group:
+            return None
+        size = 1
+        for a in group:
+            size *= mesh.shape[a]
+        if dim % size:
+            return None
+        used.update(group)
+        return group if len(group) > 1 else group[0]
+
+    spec = tuple(ok(d, a) for d, a in zip(x.shape, axes))
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

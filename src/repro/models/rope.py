@@ -1,0 +1,66 @@
+"""Rotary position embeddings, including qwen2-vl's multimodal M-RoPE.
+
+M-RoPE splits the head-dim rotation frequencies into (temporal, height,
+width) sections, each driven by its own position id.  For text tokens the
+three ids coincide, which makes plain RoPE a special case — the backbone
+always runs the M-RoPE code path when ``cfg.mrope`` and gets identical
+numbers for text-only inputs (property-tested in tests/test_models.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), f32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for integer ``positions`` (..., S) -> (..., S, hd//2)."""
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def mrope_cos_sin(positions3: jax.Array, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE tables.  ``positions3``: (3, B, S) (t, h, w) ids.
+
+    ``sections`` partitions the hd//2 frequency slots; slot ranges take
+    their angle from the matching positional axis.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    cos_t, sin_t = rope_cos_sin(positions3, head_dim, theta)   # (3, B, S, hd//2)
+    pieces_c, pieces_s = [], []
+    off = 0
+    for axis, width in enumerate(sections):
+        pieces_c.append(cos_t[axis, ..., off:off + width])
+        pieces_s.append(sin_t[axis, ..., off:off + width])
+        off += width
+    return jnp.concatenate(pieces_c, axis=-1), jnp.concatenate(pieces_s, axis=-1)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x`` (B, S, H, hd) by tables (B, S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def text_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def text_mrope_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    """(3, B, S) with t == h == w — text-only M-RoPE ids."""
+    p = text_positions(batch, seq, offset)
+    return jnp.broadcast_to(p[None], (3, batch, seq))

@@ -1,0 +1,507 @@
+"""The composable LM: all ten assigned architectures behind one API.
+
+Layer stacks are organized as SUPERBLOCKS: the per-layer kind signature
+(attn/mamba/mlstm/slstm x dense/moe) repeats with some period ``p``
+(dense archs p=1, jamba p=8, xlstm p=6); parameters for each position in
+the pattern are STACKED across the ``n_layers / p`` repeats and the stack
+is traversed with ``lax.scan``.  This keeps the HLO O(p) instead of
+O(n_layers) — the difference between seconds and minutes of GSPMD
+partitioning time per dry-run cell, and the standard production trick
+(MaxText does the same).
+
+Public surface:
+  init_params / params_shape            — real init and ShapeDtypeStruct tree
+  loss_fn                               — CE (+ MoE aux) for train_step
+  forward                               — logits over a full sequence
+  prefill / decode_step                 — serving path with per-kind caches
+  init_caches / caches_shape            — KV / SSM / xLSTM state allocation
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import xlstm as xlstm_mod
+from .attention import KVCache
+from .config import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from .frontend import (audio_frontend, audio_frontend_init, vision_frontend,
+                       vision_frontend_init)
+from .mlp import mlp, mlp_init
+from .moe import MoEAux, moe_ffn, moe_init
+from .norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from .rope import (mrope_cos_sin, rope_cos_sin, text_mrope_positions,
+                   text_positions)
+
+MOE_AUX_COEF = 0.01
+Z_LOSS_COEF = 1e-4
+
+
+# ------------------------------------------------------------------ pattern
+
+def layer_signature(cfg: ModelConfig, i: int) -> tuple[str, bool]:
+    return (cfg.layer_kind(i), cfg.layer_is_moe(i))
+
+
+def pattern_period(cfg: ModelConfig) -> int:
+    sigs = [layer_signature(cfg, i) for i in range(cfg.n_layers)]
+    for p in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % p == 0 and all(
+                sigs[i] == sigs[i % p] for i in range(cfg.n_layers)):
+            return p
+    return cfg.n_layers
+
+
+def pattern(cfg: ModelConfig) -> tuple[tuple[str, bool], ...]:
+    p = pattern_period(cfg)
+    return tuple(layer_signature(cfg, i) for i in range(p))
+
+
+def n_superblocks(cfg: ModelConfig) -> int:
+    return cfg.n_layers // pattern_period(cfg)
+
+
+# ------------------------------------------------------------------- norms
+
+def _norm_init(cfg: ModelConfig, d: int) -> dict:
+    return layernorm_init(d, cfg.params_dtype) if cfg.encdec \
+        else rmsnorm_init(d, cfg.params_dtype)
+
+
+def _norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    return layernorm(p, x, cfg.norm_eps) if "bias" in p \
+        else rmsnorm(p, x, cfg.norm_eps)
+
+
+# -------------------------------------------------------------------- init
+
+def _mixer_init(key, cfg: ModelConfig, kind: str, *, cross: bool = False) -> dict:
+    if kind == ATTN:
+        return attn_mod.attention_init(key, cfg, cross=cross)
+    if kind == MAMBA:
+        return mamba_mod.mamba_init(key, cfg)
+    if kind == MLSTM:
+        return xlstm_mod.mlstm_init(key, cfg)
+    if kind == SLSTM:
+        return xlstm_mod.slstm_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _block_init(key, cfg: ModelConfig, sig: tuple[str, bool], *,
+                decoder_cross: bool = False) -> dict:
+    kind, is_moe = sig
+    keys = jax.random.split(key, 6)
+    p: dict = {"ln1": _norm_init(cfg, cfg.d_model),
+               "mixer": _mixer_init(keys[0], cfg, kind)}
+    if decoder_cross:                     # whisper decoder: cross-attn sublayer
+        p["ln_x"] = _norm_init(cfg, cfg.d_model)
+        p["cross"] = _mixer_init(keys[1], cfg, ATTN, cross=True)
+    if kind in (ATTN, MAMBA):             # separate FFN sublayer
+        p["ln2"] = _norm_init(cfg, cfg.d_model)
+        p["moe" if is_moe else "mlp"] = (
+            moe_init(keys[2], cfg) if is_moe else mlp_init(keys[2], cfg))
+    return p
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    pdt = cfg.params_dtype
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    pat = pattern(cfg)
+    per = len(pat)
+    nsb = n_superblocks(cfg)
+    # Decoder blocks, stacked per pattern position.
+    blocks = tuple(
+        _stack([_block_init(keys[s * per + pos], cfg, pat[pos],
+                            decoder_cross=cfg.encdec)
+                for s in range(nsb)])
+        for pos in range(per))
+    params: dict = {
+        "embed": {"tok": (jax.random.normal(keys[-1], (Vp, d)) * d ** -0.5
+                          ).astype(pdt)},
+        "blocks": blocks,
+        "final_norm": _norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[-2], (d, Vp)) * d ** -0.5
+                             ).astype(pdt)
+    if cfg.encdec:
+        params["frontend"] = audio_frontend_init(keys[-3], cfg)
+        params["enc_blocks"] = _stack(
+            [_block_init(keys[-4 - i], cfg, (ATTN, False))
+             for i in range(cfg.n_encoder_layers)])
+        params["enc_norm"] = _norm_init(cfg, d)
+    if cfg.family == "vlm":
+        params["frontend"] = vision_frontend_init(keys[-3], cfg)
+    return params
+
+
+def params_shape(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct tree — the dry-run's no-allocation stand-in."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ----------------------------------------------------------------- forward
+
+def _rope_tables(cfg: ModelConfig, positions) -> tuple[jax.Array, jax.Array]:
+    if cfg.mrope:
+        return mrope_cos_sin(positions, cfg.hd, cfg.rope_theta, cfg.mrope_sections)
+    return rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+
+def _block_forward(cfg: ModelConfig, sig, bp: dict, x, cos, sin,
+                   enc_out=None) -> tuple[jax.Array, MoEAux]:
+    kind, is_moe = sig
+    aux = MoEAux(jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    h = _norm(cfg, bp["ln1"], x)
+    if kind == ATTN:
+        h = attn_mod.attention(bp["mixer"], cfg, h, cos, sin, causal=True)
+    elif kind == MAMBA:
+        h = mamba_mod.mamba_forward(bp["mixer"], cfg, h)
+    elif kind == MLSTM:
+        h = xlstm_mod.mlstm_forward(bp["mixer"], cfg, h)
+    else:
+        h = xlstm_mod.slstm_forward(bp["mixer"], cfg, h)
+    x = x + h
+    if "cross" in bp and enc_out is not None:
+        h = _norm(cfg, bp["ln_x"], x)
+        h = attn_mod.attention(bp["cross"], cfg, h, None, None,
+                               xattn_kv=enc_out)
+        x = x + h
+    if "moe" in bp:
+        h, aux = moe_ffn(bp["moe"], cfg, _norm(cfg, bp["ln2"], x))
+        x = x + h
+    elif "mlp" in bp:
+        x = x + mlp(bp["mlp"], cfg, _norm(cfg, bp["ln2"], x))
+    return x, aux
+
+
+def _remat_groups(nsb: int) -> int:
+    """sqrt-remat group count: largest divisor of ``nsb`` <= sqrt(nsb).
+
+    A single remat scan saves one residual-stream activation per layer —
+    10.7 GB/device at granite train_4k.  Grouping G x I = nsb with an
+    outer checkpointed scan stores only G group-boundary activations and
+    recomputes I layers per backward group: peak ~ (G + I) activations,
+    minimized at G ~ sqrt(nsb) (2.6x the cost of one extra forward)."""
+    if nsb < 9:
+        return 1
+    g = int(nsb ** 0.5)
+    while nsb % g:
+        g -= 1
+    return max(1, g)
+
+
+def _run_stack(params, cfg: ModelConfig, x, cos, sin, enc_out=None):
+    pat = pattern(cfg)
+
+    from .pshard import hint
+
+    def superblock(carry, bps):
+        x, lb, dr = carry
+        # Pin the residual stream (and thereby the scan-saved remat
+        # stacks): without this GSPMD invents shardings for the saved
+        # carries (it even shards the STACK dim) and pays all-to-all
+        # resharding storms at every checkpoint boundary of the backward
+        # pass (EXPERIMENTS.md section Perf, iteration G1).
+        x = hint(x, "dp", None, None)
+        for pos, sig in enumerate(pat):
+            x, aux = _block_forward(cfg, sig, bps[pos], x, cos, sin, enc_out)
+            lb = lb + aux.load_balance_loss
+            dr = dr + aux.dropped_fraction
+        x = hint(x, "dp", None, None)
+        return (x, lb, dr), None
+
+    nsb = n_superblocks(cfg)
+    zero = jnp.zeros((), jnp.float32)
+    G = _remat_groups(nsb) if cfg.remat and not cfg.unroll else 1
+    if G > 1:
+        I = nsb // G
+        grouped = jax.tree.map(
+            lambda t: t.reshape((G, I) + t.shape[1:]), params["blocks"])
+
+        @jax.checkpoint
+        def group_body(carry, bps_group):
+            # Inner layers are ALSO checkpointed: during the group's
+            # backward recompute the inner scan must not stack every
+            # per-layer intermediate (qkv projections, flash residuals)
+            # — only the I layer-boundary activations.
+            carry, _ = lax.scan(jax.checkpoint(superblock), carry, bps_group)
+            return carry
+
+        (x, lb, dr), _ = lax.scan(lambda c, g: (group_body(c, g), None),
+                                  (x, zero, zero), grouped)
+    else:
+        body = jax.checkpoint(superblock) if cfg.remat else superblock
+        (x, lb, dr), _ = lax.scan(body, (x, zero, zero), params["blocks"],
+                                  unroll=cfg.unroll)
+    n_moe = max(1, sum(1 for s in pat for _ in [s] if s[1]) * nsb)
+    return x, MoEAux(lb / n_moe, dr / n_moe)
+
+
+def _encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder: frontend stub + non-causal attention stack."""
+    x = audio_frontend(params["frontend"], cfg, frames)
+
+    def enc_block(carry, bp):
+        x = carry
+        h = _norm(cfg, bp["ln1"], x)
+        h = attn_mod.attention(bp["mixer"], cfg, h, None, None, causal=False)
+        x = x + h
+        x = x + mlp(bp["mlp"], cfg, _norm(cfg, bp["ln2"], x))
+        return x, None
+
+    body = jax.checkpoint(enc_block) if cfg.remat else enc_block
+    x, _ = lax.scan(body, x, params["enc_blocks"], unroll=cfg.unroll)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"]["tok"], tokens, axis=0
+                    ).astype(cfg.compute_dtype)
+
+
+def lm_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x.astype(jnp.float32) @ head.astype(jnp.float32))
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None,
+            ) -> tuple[jax.Array, MoEAux]:
+    """Full-sequence logits (train / eval).  ``frames``: whisper encoder
+    stub input; ``patches``: VLM image-token embeddings prepended upstream
+    (the shape cells are text-shaped; patches flow through the same path)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    if patches is not None:
+        x = x + vision_frontend(params["frontend"], cfg, patches)
+    if positions is None:
+        positions = (text_mrope_positions(B, S) if cfg.mrope
+                     else text_positions(B, S))
+    cos, sin = _rope_tables(cfg, positions)
+    enc_out = _encode(params, cfg, frames) if cfg.encdec else None
+    x, aux = _run_stack(params, cfg, x, cos, sin, enc_out)
+    x = _norm(cfg, params["final_norm"], x)
+    return lm_logits(params, cfg, x), aux
+
+
+# -------------------------------------------------------------------- loss
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """Next-token CE with ignore-index -1, plus MoE aux and z-loss."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        frames=batch.get("frames"),
+        patches=batch.get("patches"))
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce_loss = ce.sum() / denom
+    z_loss = Z_LOSS_COEF * ((lse * mask) ** 2).sum() / denom
+    total = ce_loss + z_loss + MOE_AUX_COEF * aux.load_balance_loss
+    metrics = {"loss": ce_loss, "z_loss": z_loss,
+               "moe_lb": aux.load_balance_loss, "moe_drop": aux.dropped_fraction,
+               "total_loss": total}
+    return total, metrics
+
+
+# ------------------------------------------------------------------ caches
+
+def _cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind == ATTN:
+        return attn_mod.init_kv_cache(cfg, batch, max_len)
+    if kind == MAMBA:
+        return mamba_mod.mamba_init_state(cfg, batch)
+    if kind == MLSTM:
+        return xlstm_mod.mlstm_init_state(cfg, batch)
+    return xlstm_mod.slstm_init_state(cfg, batch)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Tuple (per pattern position) of stacked (n_super leading) states.
+    Whisper adds per-position cross-attention K/V computed at prefill."""
+    pat = pattern(cfg)
+    nsb = n_superblocks(cfg)
+    caches = tuple(
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (nsb,) + x.shape),
+                     _cache_for(cfg, sig[0], batch, max_len))
+        for sig in pat)
+    if cfg.encdec:
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        T = cfg.n_frontend_tokens
+        xkv = tuple(
+            (jnp.zeros((nsb, batch, T, kv, hd), cfg.compute_dtype),
+             jnp.zeros((nsb, batch, T, kv, hd), cfg.compute_dtype))
+            for _ in pat)
+        return {"self": caches, "cross": xkv}
+    return {"self": caches}
+
+
+def caches_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+# ----------------------------------------------------------------- prefill
+
+def _attn_prefill_cache(cfg: ModelConfig, bp: dict, h, cos, sin, max_len: int
+                        ) -> tuple[jax.Array, KVCache]:
+    """Run full attention AND fill the decode cache with the trailing keys."""
+    out = attn_mod.attention(bp["mixer"], cfg, h, cos, sin, causal=True)
+    q, k, v = attn_mod._project_qkv(bp["mixer"], cfg, h, h)
+    if cos is not None:
+        k = attn_mod.apply_rope(k, cos, sin)
+    S = h.shape[1]
+    cache = attn_mod.init_kv_cache(cfg, h.shape[0], max_len)
+    L = cache.k.shape[1]
+    if cfg.sliding_window is not None and S > L:
+        pos_tail = jnp.arange(S - L, S)
+        slots = pos_tail % L
+        cache = KVCache(k=cache.k.at[:, slots].set(k[:, -L:].astype(cache.k.dtype)),
+                        v=cache.v.at[:, slots].set(v[:, -L:].astype(cache.v.dtype)))
+    else:
+        cache = KVCache(
+            k=lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1),
+            v=lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1))
+    return out, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, *, max_len: int,
+            frames: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None):
+    """Process the prompt; return (last-token logits, filled caches).
+
+    Only the final position's logits are materialized — the full (B, S, V)
+    tensor at prefill_32k scale would be ~0.6 TB.
+    """
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    if positions is None:
+        positions = (text_mrope_positions(B, S) if cfg.mrope
+                     else text_positions(B, S))
+    cos, sin = _rope_tables(cfg, positions)
+    enc_out = _encode(params, cfg, frames) if cfg.encdec else None
+    pat = pattern(cfg)
+
+    def superblock(x, bps):
+        new_caches = []
+        for pos, sig in enumerate(pat):
+            kind, _ = sig
+            bp = bps[pos]
+            h = _norm(cfg, bp["ln1"], x)
+            if kind == ATTN:
+                h, cache = _attn_prefill_cache(cfg, bp, h, cos, sin, max_len)
+            elif kind == MAMBA:
+                h, cache = mamba_mod.mamba_prefill(bp["mixer"], cfg, h)
+            elif kind == MLSTM:
+                h, cache = xlstm_mod.mlstm_prefill(bp["mixer"], cfg, h)
+            else:
+                h, cache = xlstm_mod.slstm_prefill(bp["mixer"], cfg, h)
+            x = x + h
+            if "cross" in bp and enc_out is not None:
+                h = _norm(cfg, bp["ln_x"], x)
+                h = attn_mod.attention(bp["cross"], cfg, h, None, None,
+                                       xattn_kv=enc_out)
+                x = x + h
+                cache = (cache, attn_mod.encoder_kv(bp["cross"], cfg, enc_out))
+            if "moe" in bp:
+                h, _ = moe_ffn(bp["moe"], cfg, _norm(cfg, bp["ln2"], x))
+                x = x + h
+            elif "mlp" in bp:
+                x = x + mlp(bp["mlp"], cfg, _norm(cfg, bp["ln2"], x))
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    x, stacked = lax.scan(superblock, x, params["blocks"],
+                           unroll=cfg.unroll)
+    x_last = _norm(cfg, params["final_norm"], x[:, -1:])
+    logits = lm_logits(params, cfg, x_last)
+    if cfg.encdec:
+        caches = {"self": tuple(c for c, _ in stacked),
+                  "cross": tuple(kv for _, kv in stacked)}
+    else:
+        caches = {"self": stacked}
+    return logits, caches
+
+
+# ------------------------------------------------------------- decode step
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
+                caches: dict):
+    """One token for every sequence in the batch.
+
+    tokens: (B, 1) int32; pos: (B,) int32 absolute position per sequence
+    (continuous batching — slots decode at different depths).  A scalar
+    ``pos`` is broadcast.
+    Returns (logits (B, 1, V), new caches).
+    """
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.mrope:
+        p3 = jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+        cos, sin = _rope_tables(cfg, p3)
+    else:
+        cos, sin = _rope_tables(cfg, pos[:, None])
+    pat = pattern(cfg)
+    cross = caches.get("cross")
+
+    def superblock(x, xs):
+        if cross is not None:
+            bps, selfc, crossc = xs
+        else:
+            bps, selfc = xs
+            crossc = None
+        new_caches = []
+        for i, sig in enumerate(pat):
+            kind, _ = sig
+            bp = bps[i]
+            h = _norm(cfg, bp["ln1"], x)
+            if kind == ATTN:
+                h, cache = attn_mod.attention_decode(bp["mixer"], cfg, h, pos,
+                                                     selfc[i], cos, sin)
+            elif kind == MAMBA:
+                h, cache = mamba_mod.mamba_decode(bp["mixer"], cfg, h, selfc[i])
+            elif kind == MLSTM:
+                h, cache = xlstm_mod.mlstm_decode(bp["mixer"], cfg, h, selfc[i])
+            else:
+                h, cache = xlstm_mod.slstm_decode(bp["mixer"], cfg, h, selfc[i])
+            x = x + h
+            if "cross" in bp and crossc is not None:
+                h = _norm(cfg, bp["ln_x"], x)
+                h = attn_mod.cross_attention_decode(bp["cross"], cfg, h, crossc[i])
+                x = x + h
+            if "moe" in bp:
+                h, _ = moe_ffn(bp["moe"], cfg, _norm(cfg, bp["ln2"], x),
+                               group_size=B)
+                x = x + h
+            elif "mlp" in bp:
+                x = x + mlp(bp["mlp"], cfg, _norm(cfg, bp["ln2"], x))
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    xs = (params["blocks"], caches["self"]) if cross is None else \
+        (params["blocks"], caches["self"], cross)
+    x, new_self = lax.scan(superblock, x, xs, unroll=cfg.unroll)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = lm_logits(params, cfg, x)
+    out = {"self": new_self}
+    if cross is not None:
+        out["cross"] = cross
+    return logits, out

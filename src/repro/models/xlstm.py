@@ -1,0 +1,296 @@
+"""xLSTM mixers: chunkwise-parallel mLSTM and sequential sLSTM.
+
+TPU adaptation mirrors ``mamba.py``: the mLSTM matrix-memory recurrence
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   h_t = C_t q_t / max(|n_t q_t|, e^{-m_t})
+
+is evaluated CHUNKWISE — inside a Q-token chunk the contribution is an
+attention-shaped (Q x Q) masked product (MXU work), across chunks a
+``lax.scan`` carries the per-head (hd x hd) state.  Exponential gates are
+stabilized with the running max ``m`` exactly as in Beck et al. '24; the
+chunked evaluation keeps the same stabilizer algebra (property-tested
+against the sequential oracle in tests/test_models.py).
+
+sLSTM has a genuine sequential dependency through its block-diagonal
+recurrent matrix — it cannot be parallelized over time (the paper's
+honest analogue of the XMT's non-scaling Gram-Schmidt phase) and runs as
+``lax.scan``; the assigned xlstm-125m uses it in 2 of 12 layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .norms import rmsnorm
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, nh, hd, hd) stabilized matrix memory
+    n: jax.Array      # (B, nh, hd)     stabilized normalizer
+    m: jax.Array      # (B, nh)         log-space stabilizer
+    conv: jax.Array   # (B, dc-1, dI)   rolling conv window
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, nh, hd)
+    n: jax.Array      # (B, nh, hd)
+    h: jax.Array      # (B, nh, hd)
+    m: jax.Array      # (B, nh, hd)
+
+
+# --------------------------------------------------------------------- mLSTM
+
+_CONV_K = 4
+
+
+def mlstm_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dI = int(cfg.xlstm_proj_factor * d)
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    pdt = cfg.params_dtype
+    return {
+        "up_proj": (jax.random.normal(ks[0], (d, 2 * dI)) * d ** -0.5).astype(pdt),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_K, dI)) * _CONV_K ** -0.5).astype(pdt),
+        "conv_b": jnp.zeros((dI,), pdt),
+        "cq": (jax.random.normal(ks[2], (dI, dI)) * dI ** -0.5).astype(pdt),
+        "ck": (jax.random.normal(ks[3], (dI, dI)) * dI ** -0.5).astype(pdt),
+        "cv": (jax.random.normal(ks[4], (dI, dI)) * dI ** -0.5).astype(pdt),
+        "w_igate": (jax.random.normal(ks[5], (dI, nh)) * dI ** -0.5).astype(jnp.float32),
+        "b_igate": jnp.full((nh,), -3.0, jnp.float32),
+        "w_fgate": (jax.random.normal(ks[6], (dI, nh)) * dI ** -0.5).astype(jnp.float32),
+        "b_fgate": jnp.full((nh,), 3.0, jnp.float32),   # open forget gate at init
+        "gn_scale": jnp.ones((dI,), pdt),
+        "down_proj": (jax.random.normal(ks[7], (dI, d)) * dI ** -0.5).astype(pdt),
+    }
+
+
+def _mlstm_qkvif(p: dict, cfg: ModelConfig, x: jax.Array, conv_hist=None):
+    """Shared projections.  x: (B, S, d) -> q,k,v (B,nh,S,hd), i,f (B,nh,S)."""
+    from .mamba import _causal_conv
+    cdt = cfg.compute_dtype
+    d = cfg.d_model
+    dI = int(cfg.xlstm_proj_factor * d)
+    nh = cfg.n_heads
+    hd = dI // nh
+    xz = x @ p["up_proj"].astype(cdt)
+    xm, z = jnp.split(xz, 2, axis=-1)                              # (B,S,dI)
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"].astype(cdt),
+                                  p["conv_b"].astype(cdt), history=conv_hist))
+    tohead = lambda t: t.reshape(t.shape[0], t.shape[1], nh, hd).transpose(0, 2, 1, 3)
+    q = tohead(xc @ p["cq"].astype(cdt))
+    k = tohead(xc @ p["ck"].astype(cdt)) * (hd ** -0.5)
+    v = tohead(xm @ p["cv"].astype(cdt))
+    xf = xc.astype(jnp.float32)
+    ig = (xf @ p["w_igate"] + p["b_igate"]).transpose(0, 2, 1)     # (B,nh,S)
+    fg = jax.nn.log_sigmoid((xf @ p["w_fgate"] + p["b_fgate"])).transpose(0, 2, 1)
+    return q, k, v, ig, fg, xm, z, xc
+
+
+def _headnorm(h: jax.Array, scale: jax.Array, nh: int) -> jax.Array:
+    """Per-head groupnorm (official mLSTM post-cell norm)."""
+    B, S, dI = h.shape
+    hf = h.reshape(B, S, nh, dI // nh).astype(jnp.float32)
+    mu = hf.mean(-1, keepdims=True)
+    var = hf.var(-1, keepdims=True)
+    hf = (hf - mu) * lax.rsqrt(var + 1e-6)
+    return (hf.reshape(B, S, dI) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_forward(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                  chunk: int = 64) -> jax.Array:
+    """Chunkwise-parallel mLSTM.  x: (B, S, d) -> (B, S, d)."""
+    return _mlstm_scan(p, cfg, x, chunk)[0]
+
+
+def mlstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                  chunk: int = 64) -> tuple[jax.Array, "MLSTMState"]:
+    return _mlstm_scan(p, cfg, x, chunk)
+
+
+def _mlstm_scan(p: dict, cfg: ModelConfig, x: jax.Array, chunk: int):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dI = int(cfg.xlstm_proj_factor * d)
+    hd = dI // nh
+    cdt = cfg.compute_dtype
+    q, k, v, ig, fg, xm, z, _ = _mlstm_qkvif(p, cfg, x)
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    toc = lambda t: t.reshape((B, nh, nc, Q) + t.shape[3:]).transpose(2, 0, 1, 3) \
+        if t.ndim == 3 else t.reshape((B, nh, nc, Q) + t.shape[3:]).transpose(2, 0, 1, 3, 4)
+
+    def chunk_step(state, inp):
+        C0, n0, m0 = state                                         # (B,nh,hd,hd)...
+        qc, kc, vc, igc, fgc = inp                                 # (B,nh,Q,*)
+        b = jnp.cumsum(fgc, axis=-1)                               # (B,nh,Q) log decay
+        a = igc - b
+        M = jnp.maximum(m0[..., None], lax.cummax(a, axis=2))      # (B,nh,Q)
+        m = b + M
+        # Intra-chunk: masked attention-shaped product with log-gate weights.
+        w = jnp.exp(a[:, :, None, :] - M[:, :, :, None])           # (B,nh,Q_t,Q_j)
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qc, kc) * w * tri
+        num = jnp.einsum("bhtj,bhjd->bhtd", scores, vc)
+        den = scores.sum(-1)                                       # (B,nh,Q)
+        # Inter-chunk: carried state scaled by exp(m0 - M_t).
+        inter = jnp.exp(m0[..., None] - M)                         # (B,nh,Q)
+        num = num + inter[..., None] * jnp.einsum("bhde,bhtd->bhte", C0, qc)
+        den = den + inter * jnp.einsum("bhd,bhtd->bht", n0, qc)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        # State to chunk end.
+        wQ = jnp.exp(a - M[..., -1:])                              # (B,nh,Q)
+        sQ = jnp.exp(m0 - M[..., -1])                              # (B,nh)
+        C1 = sQ[..., None, None] * C0 + jnp.einsum("bhj,bhjd,bhje->bhde", wQ, kc, vc)
+        n1 = sQ[..., None] * n0 + jnp.einsum("bhj,bhjd->bhd", wQ, kc)
+        return (C1, n1, m[..., -1]), h
+
+    from .pshard import hint
+    state0 = (hint(jnp.zeros((B, nh, hd, hd), jnp.float32),
+                   "dp", None, "model", None),
+              hint(jnp.zeros((B, nh, hd), jnp.float32), "dp", None, "model"),
+              hint(jnp.zeros((B, nh), jnp.float32), "dp", None))
+    (C1, n1, m1), hs = lax.scan(chunk_step, state0,
+                                (toc(qf), toc(kf), toc(vf), toc(ig), toc(fg)))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, nh, S, hd)          # (B,nh,S,hd)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, dI).astype(cdt)
+    h = _headnorm(h, p["gn_scale"], nh)
+    h = h * jax.nn.silu(z)
+    out = h @ p["down_proj"].astype(cdt)
+    conv_hist = xm[:, -(_CONV_K - 1):] if S >= _CONV_K - 1 else jnp.pad(
+        xm, ((0, 0), (_CONV_K - 1 - S, 0), (0, 0)))
+    return out, MLSTMState(C=C1, n=n1, m=m1, conv=conv_hist.astype(cdt))
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    dI = int(cfg.xlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    hd = dI // nh
+    return MLSTMState(
+        C=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, nh, hd), jnp.float32),
+        m=jnp.zeros((batch, nh), jnp.float32),
+        conv=jnp.zeros((batch, _CONV_K - 1, dI), cfg.compute_dtype),
+    )
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: MLSTMState
+                 ) -> tuple[jax.Array, MLSTMState]:
+    """One token, O(1) state.  x: (B, 1, d)."""
+    B = x.shape[0]
+    nh = cfg.n_heads
+    dI = int(cfg.xlstm_proj_factor * cfg.d_model)
+    cdt = cfg.compute_dtype
+    q, k, v, ig, fg, xm, z, xc = _mlstm_qkvif(p, cfg, x, conv_hist=state.conv)
+    qf, kf, vf = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))  # (B,nh,hd)
+    igt, fgt = ig[:, :, 0], fg[:, :, 0]                            # (B,nh)
+    m1 = jnp.maximum(fgt + state.m, igt)
+    fw = jnp.exp(fgt + state.m - m1)
+    iw = jnp.exp(igt - m1)
+    C1 = fw[..., None, None] * state.C + iw[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n1 = fw[..., None] * state.n + iw[..., None] * kf
+    num = jnp.einsum("bhde,bhd->bhe", C1, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n1, qf)), jnp.exp(-m1))
+    h = (num / den[..., None]).reshape(B, 1, dI).astype(cdt)
+    h = _headnorm(h, p["gn_scale"], nh)
+    h = h * jax.nn.silu(z)
+    new_conv = jnp.concatenate([state.conv[:, 1:], xm.astype(state.conv.dtype)], axis=1)
+    return h @ p["down_proj"].astype(cdt), MLSTMState(C=C1, n=n1, m=m1, conv=new_conv)
+
+
+# --------------------------------------------------------------------- sLSTM
+
+def slstm_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 3)
+    pdt = cfg.params_dtype
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * d ** -0.5).astype(pdt),
+        "b_in": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), -3.0),
+                                 jnp.full((d,), 3.0), jnp.zeros((d,))]).astype(jnp.float32),
+        "r_blocks": (jax.random.normal(ks[1], (4, nh, hd, hd)) * hd ** -0.5).astype(pdt),
+        "gn_scale": jnp.ones((d,), pdt),
+        # post-cell feed-forward (the block's own up/down, d_ff == 0 family)
+        "w_up": (jax.random.normal(ks[2], (d, int(cfg.xlstm_proj_factor * d) * 2))
+                 * d ** -0.5).astype(pdt),
+        "w_down": (jax.random.normal(jax.random.fold_in(ks[2], 1),
+                                     (int(cfg.xlstm_proj_factor * d), d))
+                   * (cfg.xlstm_proj_factor * d) ** -0.5).astype(pdt),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    zero = jnp.zeros((batch, nh, hd), jnp.float32)
+    return SLSTMState(c=zero, n=zero, h=zero, m=zero - 10.0)
+
+
+def _slstm_cell(p: dict, cfg: ModelConfig, xw: jax.Array, st: SLSTMState
+                ) -> tuple[jax.Array, SLSTMState]:
+    """One step.  xw: (B, 4d) pre-computed input projection."""
+    nh = cfg.n_heads
+    d = cfg.d_model
+    hd = d // nh
+    B = xw.shape[0]
+    rb = p["r_blocks"].astype(jnp.float32)                         # (4,nh,hd,hd)
+    rec = jnp.einsum("bhd,ghde->gbhe", st.h, rb)                   # (4,B,nh,hd)
+    gates = xw.astype(jnp.float32).reshape(B, 4, nh, hd).transpose(1, 0, 2, 3) + rec
+    zt = jnp.tanh(gates[0])
+    it = gates[1]
+    ft = gates[2]
+    ot = jax.nn.sigmoid(gates[3])
+    m1 = jnp.maximum(ft + st.m, it)
+    iw = jnp.exp(it - m1)
+    fw = jnp.exp(ft + st.m - m1)
+    c1 = fw * st.c + iw * zt
+    n1 = jnp.maximum(fw * st.n + iw, 1e-6)
+    h1 = ot * c1 / n1
+    return h1.reshape(B, d), SLSTMState(c=c1, n=n1, h=h1, m=m1)
+
+
+def slstm_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Sequential scan over time (inherently serial — see module docstring)."""
+    return _slstm_run(p, cfg, x)[0]
+
+
+def slstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array
+                  ) -> tuple[jax.Array, SLSTMState]:
+    return _slstm_run(p, cfg, x)
+
+
+def _slstm_run(p: dict, cfg: ModelConfig, x: jax.Array):
+    B, S, d = x.shape
+    cdt = cfg.compute_dtype
+    xw = (x @ p["w_in"].astype(cdt)).astype(jnp.float32) + p["b_in"]
+
+    def step(st, xt):
+        h, st1 = _slstm_cell(p, cfg, xt, st)
+        return st1, h
+
+    st_last, hs = lax.scan(step, slstm_init_state(cfg, B), xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(cdt)                              # (B,S,d)
+    h = _headnorm(h, p["gn_scale"], cfg.n_heads)
+    u, g = jnp.split(h @ p["w_up"].astype(cdt), 2, axis=-1)
+    return (u * jax.nn.silu(g)) @ p["w_down"].astype(cdt), st_last
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, st: SLSTMState
+                 ) -> tuple[jax.Array, SLSTMState]:
+    cdt = cfg.compute_dtype
+    xw = (x[:, 0] @ p["w_in"].astype(cdt)).astype(jnp.float32) + p["b_in"]
+    h, st1 = _slstm_cell(p, cfg, xw, st)
+    h = h[:, None].astype(cdt)
+    h = _headnorm(h, p["gn_scale"], cfg.n_heads)
+    u, g = jnp.split(h @ p["w_up"].astype(cdt), 2, axis=-1)
+    return (u * jax.nn.silu(g)) @ p["w_down"].astype(cdt), st1

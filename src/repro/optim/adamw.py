@@ -1,0 +1,66 @@
+"""AdamW with decoupled weight decay, pytree-native (no optax dependency).
+
+Moments are stored in f32 regardless of param dtype and inherit the
+parameter sharding (params are FSDP+TP sharded by the launcher, so the
+optimizer state is ZeRO-sharded for free).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    """Returns (new_params, new_state).  ``lr`` may be a traced scalar."""
+    c = state.count + 1
+    cf = c.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    class _U:                      # unregistered type -> opaque pytree leaf
+        __slots__ = ("p", "m", "v")
+
+        def __init__(self, p, m, v):
+            self.p, self.m, self.v = p, m, v
+
+    def leaf(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m1 = b1 * m + (1 - b1) * gf
+        v1 = b2 * v + (1 - b2) * gf * gf
+        upd = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + eps)
+        upd = upd + weight_decay * p.astype(jnp.float32)
+        return _U((p.astype(jnp.float32) - lr * upd).astype(p.dtype), m1, v1)
+
+    out = jax.tree.map(leaf, grads, state.mu, state.nu, params)
+    pick = lambda attr: jax.tree.map(
+        lambda u: getattr(u, attr), out, is_leaf=lambda x: isinstance(x, _U))
+    return pick("p"), AdamWState(mu=pick("m"), nu=pick("v"), count=c)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn

@@ -1,0 +1,124 @@
+"""RandLR gradient compression — the paper's randomized low-rank
+decomposition as a distributed-optimization feature (DESIGN.md section 3.1).
+
+At pod scale the data-parallel gradient all-reduce over the ``pod`` axis
+is the collective-term bottleneck (inter-pod links are the slowest in the
+machine).  Instead of reducing the dense ``m x n`` gradient, each pod:
+
+  1. sketches its EF-corrected local gradient with a SHARED random test
+     matrix:      W_p = (g_p + e_p) @ Omega^T          (m x r)
+  2. the W_p are mean-reduced over pods  ->  W        (the FIRST small
+     collective: m*r elements instead of m*n)
+  3. every pod computes the same orthonormal range basis Q = orth(W)
+     via CholeskyQR2 (pure-MXU, replicated — the paper's "slow part runs
+     on a tiny matrix" at pod scale)
+  4. projects:  P_p = Q^T (g_p + e_p),  mean-reduced  ->  P  (the SECOND
+     small collective: r*n elements)
+  5. reconstructs  g_hat = Q P  and folds the residual into the error-
+     feedback buffer:  e_p <- (g_p + e_p) - g_hat.
+
+This is exactly the paper's randomized range-finder (sketch -> QR on the
+tiny sketch -> column-parallel projection), arranged PowerSGD-style so
+all pods share one basis.  Bytes on the pod links drop from ``mn`` to
+``(m + n) r`` per matrix — the ratio the roofline's collective term sees.
+
+Implementation detail: the per-pod gradients arrive as a leading ``npods``
+axis (the launcher vmaps ``grad`` over pod-sharded microbatches), so the
+"mean over pods" below IS the pod-axis collective once the leading axis is
+sharded over ``pod`` — no manual psums, plain pjit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+class CompressorConfig(NamedTuple):
+    rank: int = 16               # r — the paper's k, per gradient block
+    min_dim: int = 128           # only compress blocks with min(m, n) >= this
+    min_numel: int = 1 << 16     # ... and at least this many elements
+    error_feedback: bool = True
+
+
+def _is_compressible(leaf, cfg: CompressorConfig) -> bool:
+    if leaf.ndim < 2:
+        return False
+    m, n = leaf.shape[-2], leaf.shape[-1]
+    return (min(m, n) >= cfg.min_dim and m * n >= cfg.min_numel
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def ef_init(params, cfg: CompressorConfig, npods: int) -> Any:
+    """Per-pod error-feedback buffers; zeros for non-compressed leaves
+    are represented by a scalar placeholder to save memory."""
+    def leaf(p):
+        if cfg.error_feedback and _is_compressible(p, cfg):
+            return jnp.zeros((npods,) + p.shape, jnp.float32)
+        return jnp.zeros((), jnp.float32)
+    return jax.tree.map(leaf, params)
+
+
+def _ridged_orth(W):
+    """CholeskyQR2 with a trace ridge: orthonormal range basis that stays
+    finite even for (near-)zero sketches — unused experts produce exactly
+    zero gradient blocks, and plain Cholesky would NaN on them."""
+    def one_round(Q):
+        G = Q.T @ Q
+        r = G.shape[0]
+        ridge = 1e-6 * jnp.trace(G) / r + 1e-30
+        C = jnp.linalg.cholesky(G + ridge * jnp.eye(r, dtype=G.dtype))
+        return jnp.linalg.solve(C, Q.T).T
+    return one_round(one_round(W))
+
+
+def _block_compress(g, e, omega, r):
+    """One (m, n) block: returns (g_hat, new_e).  ``g`` carries a leading
+    pod axis; the two ``.mean(0)`` calls are the pod collectives."""
+    gf = g.astype(jnp.float32) + e                     # (npods, m, n)
+    W = jnp.einsum("pmn,rn->pmr", gf, omega).mean(0)   # collective #1: m*r
+    Q = _ridged_orth(W)                                # (m, r), replicated
+    P = jnp.einsum("mr,pmn->prn", Q, gf).mean(0)       # collective #2: r*n
+    g_hat = Q @ P                                      # (m, n), replicated
+    new_e = gf - g_hat[None]
+    return g_hat, new_e
+
+
+def compress_grads(key: jax.Array, grads_per_pod, ef_state,
+                   cfg: CompressorConfig):
+    """grads_per_pod: pytree with leading ``npods`` axis on every leaf.
+
+    Returns (mean_grads, new_ef_state, stats).  Compressible 2-D (or
+    stacked 3-D+) leaves go through the low-rank path; everything else is
+    a plain mean over pods (these leaves are small).
+    """
+    leaves, treedef = jax.tree.flatten(grads_per_pod)
+    ef_leaves = jax.tree.flatten(ef_state)[0]
+    out, new_ef = [], []
+    dense_bytes = comp_bytes = 0
+    for i, (g, e) in enumerate(zip(leaves, ef_leaves)):
+        gl = g[0]                                       # shape sans pod axis
+        if not _is_compressible(gl, cfg):
+            out.append(g.mean(0))
+            new_ef.append(e)
+            continue
+        m, n = gl.shape[-2], gl.shape[-1]
+        r = min(cfg.rank, m, n)
+        omega = jax.random.normal(jax.random.fold_in(key, i), (r, n),
+                                  jnp.float32) * (n ** -0.5)
+        lead = gl.shape[:-2]                            # stacked (n_super, ...) dims
+        gle = g.reshape((g.shape[0], -1, m, n))         # (p, L, m, n)
+        ee = (e.reshape((g.shape[0], -1, m, n)) if e.ndim else
+              jnp.zeros_like(gle, jnp.float32))
+        gh, ne = jax.vmap(lambda gb, eb: _block_compress(gb, eb, omega, r),
+                          in_axes=(1, 1), out_axes=(0, 1))(gle, ee)
+        out.append(gh.reshape(lead + (m, n)).astype(gl.dtype))
+        new_ef.append(ne.reshape(g.shape) if cfg.error_feedback else e)
+        import math
+        L = math.prod(lead) if lead else 1
+        dense_bytes += L * m * n * 4
+        comp_bytes += L * (m + n) * r * 4
+    stats = {"dense_bytes": dense_bytes, "compressed_bytes": comp_bytes,
+             "ratio": comp_bytes / max(1, dense_bytes)}
+    return treedef.unflatten(out), treedef.unflatten(new_ef), stats

@@ -1,0 +1,7 @@
+"""Fault-tolerance runtime: heartbeats, failure -> elastic re-mesh,
+straggler detection with adaptive compression rank."""
+from .coordinator import Coordinator, HostFailure, plan_elastic_mesh
+from .straggler import StragglerMonitor
+
+__all__ = ["Coordinator", "HostFailure", "plan_elastic_mesh",
+           "StragglerMonitor"]

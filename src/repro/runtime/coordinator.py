@@ -1,0 +1,90 @@
+"""Heartbeat coordinator + elastic re-mesh planning.
+
+On a real cluster each host process ticks its heartbeat between steps;
+the coordinator (rank 0, or an external service) marks hosts dead after
+``timeout`` and raises :class:`HostFailure`.  The recovery path is pure
+planning logic and therefore fully testable off-cluster:
+
+  1. surviving host count -> :func:`plan_elastic_mesh` picks the largest
+     production-shaped mesh that still fits (keeping the ``model`` axis
+     intact so TP shardings stay valid — only data parallelism shrinks),
+  2. the train loop rebuilds shardings on the new mesh and restores the
+     last checkpoint through ``checkpoint.restore_pytree`` (mesh-agnostic
+     by construction),
+  3. the deterministic data pipeline replays from the restored step.
+
+The injectable ``clock`` makes failure scenarios unit-testable.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+
+class HostFailure(RuntimeError):
+    def __init__(self, dead_hosts: list[int], alive: int):
+        super().__init__(f"hosts {dead_hosts} missed heartbeat; {alive} alive")
+        self.dead_hosts = dead_hosts
+        self.alive = alive
+
+
+class Coordinator:
+    """Heartbeat registry.  ``check()`` raises HostFailure when any host
+    is silent for longer than ``timeout_s``."""
+
+    def __init__(self, n_hosts: int, *, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self.clock = clock
+        now = clock()
+        self._last = {h: now for h in range(n_hosts)}
+        self._dead: set[int] = set()
+
+    def heartbeat(self, host: int):
+        if host in self._dead:
+            raise RuntimeError(f"host {host} was declared dead; must rejoin")
+        self._last[host] = self.clock()
+
+    def mark_dead(self, host: int):
+        """Explicit failure injection (tests / external watchdog)."""
+        self._dead.add(host)
+
+    def rejoin(self, host: int):
+        """Scale-up path: a replacement host joins before the next re-mesh."""
+        self._dead.discard(host)
+        self._last[host] = self.clock()
+
+    @property
+    def alive_hosts(self) -> list[int]:
+        return [h for h in range(self.n_hosts) if h not in self._dead]
+
+    def check(self):
+        now = self.clock()
+        newly = [h for h, t in self._last.items()
+                 if h not in self._dead and now - t > self.timeout_s]
+        if newly:
+            self._dead.update(newly)
+        if self._dead:
+            raise HostFailure(sorted(self._dead), len(self.alive_hosts))
+
+
+def plan_elastic_mesh(alive_chips: int, *, model_axis: int = 16,
+                      chips_per_pod: int = 256) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest production-shaped mesh that fits on ``alive_chips``.
+
+    Keeps ``model`` fixed (TP shardings must stay valid: param PartitionSpecs
+    reference the axis SIZE through divisibility) and shrinks data/pod
+    parallelism to the largest power of two that fits.  Returns
+    (shape, axis_names) for ``jax.make_mesh``.
+    """
+    if alive_chips < model_axis:
+        raise ValueError(f"cannot keep model={model_axis} TP on "
+                         f"{alive_chips} chips")
+    pods = alive_chips // chips_per_pod
+    if pods >= 2:
+        return (pods, chips_per_pod // model_axis, model_axis), ("pod", "data", "model")
+    data = 1
+    while data * 2 * model_axis <= alive_chips:
+        data *= 2
+    return (data, model_axis), ("data", "model")

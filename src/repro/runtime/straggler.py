@@ -1,0 +1,57 @@
+"""Straggler detection + mitigation.
+
+Per-host step-time EWMAs; a host whose EWMA exceeds ``threshold`` x the
+fleet median is flagged.  Mitigation is the paper's own knob: the RandLR
+gradient-compression rank drops one tier (less traffic through the slow
+host's links) — see DESIGN.md section 5.  Tiers are static ranks so each
+tier is a separately-compiled train_step; the loop swaps functions, never
+recompiles mid-tier.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, *, alpha: float = 0.2,
+                 threshold: float = 1.5,
+                 rank_tiers: Sequence[int] = (32, 16, 8, 4)):
+        self.n_hosts = n_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.rank_tiers = tuple(rank_tiers)
+        self._tier = 0
+        self._ewma: dict[int, float] = {}
+
+    def record(self, host: int, step_seconds: float):
+        prev = self._ewma.get(host)
+        self._ewma[host] = (step_seconds if prev is None
+                            else (1 - self.alpha) * prev + self.alpha * step_seconds)
+
+    @property
+    def fleet_median(self) -> Optional[float]:
+        if not self._ewma:
+            return None
+        vals = sorted(self._ewma.values())
+        return vals[len(vals) // 2]
+
+    def stragglers(self) -> list[int]:
+        med = self.fleet_median
+        if med is None or med <= 0:
+            return []
+        return [h for h, v in self._ewma.items() if v > self.threshold * med]
+
+    @property
+    def compression_rank(self) -> int:
+        return self.rank_tiers[self._tier]
+
+    def adapt(self) -> bool:
+        """Drop one rank tier if stragglers persist.  Returns True when the
+        tier changed (caller swaps to the pre-compiled step fn)."""
+        if self.stragglers() and self._tier + 1 < len(self.rank_tiers):
+            self._tier += 1
+            return True
+        if not self.stragglers() and self._tier > 0:
+            self._tier -= 1
+            return True
+        return False

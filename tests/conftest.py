@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — single-device by design;
+multi-device behaviour is tested via subprocesses (see test_distributed.py)
+so smoke tests and benches keep seeing 1 device."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600,
+                     x64: bool = False) -> subprocess.CompletedProcess:
+    """Run ``code`` in a fresh interpreter with N fake XLA devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if x64:
+        env["JAX_ENABLE_X64"] = "1"
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

@@ -1,0 +1,104 @@
+"""Checkpoint store + deterministic data pipeline."""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step, restore_pytree,
+                              save_pytree)
+from repro.data import PrefetchIterator, SyntheticConfig, batch_for_step
+
+KEY = jax.random.key(0)
+
+
+def tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": (jnp.ones((2,), jnp.int32), {"c": jnp.asarray(2.5)})}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_pytree(str(tmp_path), 7, t)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.eval_shape(lambda: t)
+    out = restore_pytree(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_pytree(str(tmp_path), 1, tree())
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree())
+    mgr.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_000003", "step_000004"]
+    step, out = mgr.restore_latest(jax.eval_shape(tree))
+    assert step == 4 and out is not None
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path), 1, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        restore_pytree(str(tmp_path), 1, {"a": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_pytree(str(tmp_path), 1, {"a": jnp.ones((3,))})
+    with pytest.raises(KeyError):
+        restore_pytree(str(tmp_path), 1,
+                       {"zz": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+# ------------------------------------------------------------------- data
+
+def test_data_deterministic_replay():
+    cfg = SyntheticConfig(vocab_size=128, seq_len=32, global_batch=8, seed=3)
+    b1 = batch_for_step(cfg, 17)
+    b2 = batch_for_step(cfg, 17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = batch_for_step(cfg, 18)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = SyntheticConfig(vocab_size=128, seq_len=16, global_batch=8, seed=0)
+    full = batch_for_step(cfg, 5)
+    assert full["tokens"].shape == (8, 16)
+    shards = [batch_for_step(cfg, 5, host=h, n_hosts=4) for h in range(4)]
+    assert all(s["tokens"].shape == (2, 16) for s in shards)
+    # labels are next-token shifted views of the same stream
+    np.testing.assert_array_equal(np.asarray(full["tokens"][:, 1:]),
+                                  np.asarray(full["labels"][:, :-1]))
+
+
+def test_data_is_learnable_not_uniform():
+    cfg = SyntheticConfig(vocab_size=256, seq_len=64, global_batch=64,
+                          seed=1, noise=0.0)
+    b = batch_for_step(cfg, 0)
+    toks = np.asarray(b["tokens"])
+    # noiseless rows collapse to at most `period` distinct sequences —
+    # the structure a model can learn (noise is added on top of this)
+    assert len(np.unique(toks, axis=0)) <= cfg.period
+
+
+def test_prefetch_iterator():
+    it = PrefetchIterator(iter(range(5)), depth=2)
+    assert list(it) == [0, 1, 2, 3, 4]
+
+    def boom():
+        yield 1
+        raise RuntimeError("io error")
+    it = PrefetchIterator(boom())
+    assert next(it) == 1
+    with pytest.raises(RuntimeError):
+        next(it)

@@ -1,0 +1,181 @@
+"""Core algorithm tests: the paper's RID pipeline + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scope():
+    """f64 for this module only — leaking x64 into later modules changes
+    weak-type promotion and flips near-tie argmaxes in the LM tests."""
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+from repro.core import (cgs2_pivoted_qr, cholesky_qr2, error_bound,
+                        expected_sigma_kp1, gaussian_sketch, householder_qr,
+                        rid, rsvd, spectral_error, spectral_norm_dense,
+                        srft_sketch, srht_sketch)
+from repro.core.sketch import fwht
+from repro.core.tsolve import (interp_from_qr, solve_upper_triangular,
+                               solve_upper_triangular_xla)
+
+
+def lowrank(key, m, n, k, dtype=jnp.float64, cplx=False):
+    kb, kp, kb2, kp2 = jax.random.split(key, 4)
+    B = jax.random.normal(kb, (m, k), dtype=dtype)
+    P = jax.random.normal(kp, (k, n), dtype=dtype)
+    if cplx:
+        B = B + 1j * jax.random.normal(kb2, (m, k), dtype=dtype)
+        P = P + 1j * jax.random.normal(kp2, (k, n), dtype=dtype)
+    return B @ P
+
+
+# ------------------------------------------------------------------ sketches
+
+@pytest.mark.parametrize("kind,cplx", [("srft", True), ("srft", False),
+                                       ("srht", False), ("gaussian", True),
+                                       ("gaussian", False)])
+def test_sketch_preserves_rank(kind, cplx):
+    key = jax.random.key(0)
+    m, n, k = 300, 200, 12
+    A = lowrank(key, m, n, k, cplx=cplx)
+    fn = {"srft": srft_sketch, "srht": srht_sketch,
+          "gaussian": gaussian_sketch}[kind]
+    Y = fn(jax.random.key(1), A, 2 * k)
+    s = jnp.linalg.svd(Y, compute_uv=False)
+    assert float(s[k - 1]) > 1e-8            # rank at least k survives
+    assert float(s[k] / s[0]) < 1e-10        # and not more than k
+
+
+def test_fwht_orthonormal():
+    key = jax.random.key(2)
+    x = jax.random.normal(key, (256, 33), dtype=jnp.float64)
+    y = fwht(x)
+    # orthonormal transform: norms preserved, self-inverse
+    np.testing.assert_allclose(np.linalg.norm(y, axis=0),
+                               np.linalg.norm(x, axis=0), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(fwht(y)), np.asarray(x), atol=1e-12)
+
+
+# ------------------------------------------------------------------------ QR
+
+def test_cgs2_pivoted_qr_invariants():
+    key = jax.random.key(3)
+    Y = lowrank(key, 64, 200, 20, cplx=True)
+    qr = cgs2_pivoted_qr(Y, 20)
+    QhQ = np.asarray(qr.Q.conj().T @ qr.Q)
+    np.testing.assert_allclose(QhQ, np.eye(20), atol=1e-12)   # orthonormal
+    # R1 (pivot-ordered) is upper triangular up to roundoff
+    R1 = np.asarray(jnp.take(qr.R, qr.piv, axis=1))
+    assert np.max(np.abs(np.tril(R1, -1))) < 1e-10
+    # pivots unique
+    assert len(set(np.asarray(qr.piv).tolist())) == 20
+    # Q R reconstructs the rank-k matrix
+    np.testing.assert_allclose(np.asarray(qr.Q @ qr.R), np.asarray(Y),
+                               atol=1e-9)
+
+
+@pytest.mark.parametrize("fn", [householder_qr, cholesky_qr2])
+def test_panel_qr(fn):
+    key = jax.random.key(4)
+    Y = jax.random.normal(key, (96, 24), dtype=jnp.float64)
+    Q, R = fn(Y)
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(24), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(Q @ R), np.asarray(Y), atol=1e-10)
+    assert np.max(np.abs(np.tril(np.asarray(R), -1))) < 1e-12
+
+
+# -------------------------------------------------------------------- tsolve
+
+def test_tsolve_matches_xla():
+    key = jax.random.key(5)
+    k, n = 40, 130
+    R1 = jnp.triu(jax.random.normal(key, (k, k), dtype=jnp.float64)) \
+        + 4 * jnp.eye(k, dtype=jnp.float64)
+    R2 = jax.random.normal(jax.random.key(6), (k, n), dtype=jnp.float64)
+    T1 = solve_upper_triangular(R1, R2)
+    T2 = solve_upper_triangular_xla(R1, R2)
+    np.testing.assert_allclose(np.asarray(T1), np.asarray(T2), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(jnp.triu(R1) @ T1),
+                               np.asarray(R2), atol=1e-10)
+
+
+# ---------------------------------------------------------------------- RID
+
+@pytest.mark.parametrize("kind,cplx,dtype", [
+    ("srft", True, jnp.complex128), ("srft", False, jnp.float64),
+    ("srht", False, jnp.float64), ("srht", False, jnp.float32),
+    ("gaussian", True, jnp.complex128), ("gaussian", False, jnp.float32),
+])
+def test_rid_reconstructs(kind, cplx, dtype):
+    key = jax.random.key(7)
+    m, n, k = 400, 300, 15
+    rdt = jnp.float64 if dtype in (jnp.float64, jnp.complex128) else jnp.float32
+    A = lowrank(key, m, n, k, dtype=rdt, cplx=cplx)
+    dec = rid(jax.random.key(8), A, k, sketch_kind=kind)
+    err = float(spectral_norm_dense(A - dec.reconstruct()))
+    scale = float(spectral_norm_dense(A))
+    tol = 1e-9 if rdt == jnp.float64 else 1e-3
+    assert err / scale < tol
+    # P carries an exact identity at the pivot columns (paper eq. 11)
+    Pp = np.asarray(jnp.take(dec.P, dec.J, axis=1))
+    np.testing.assert_allclose(Pp, np.eye(k), atol=0)
+    # B is an exact column subset
+    np.testing.assert_allclose(np.asarray(dec.B),
+                               np.asarray(A[:, np.asarray(dec.J)]), atol=0)
+
+
+def test_rsvd_matches_dense_svd():
+    key = jax.random.key(9)
+    A = lowrank(key, 300, 220, 10, cplx=True)
+    out = rsvd(jax.random.key(10), A, 10)
+    s_dense = np.linalg.svd(np.asarray(A), compute_uv=False)[:10]
+    np.testing.assert_allclose(np.asarray(out.S), s_dense, rtol=1e-8)
+    err = float(spectral_norm_dense(A - out.reconstruct()))
+    assert err < 1e-8 * s_dense[0]
+
+
+def test_spectral_error_estimator():
+    key = jax.random.key(11)
+    A = lowrank(key, 200, 150, 8)
+    dec = rid(jax.random.key(12), A, 6)      # under-rank: non-trivial error
+    est = float(spectral_error(jax.random.key(13), A, dec.B, dec.P, iters=60))
+    exact = float(spectral_norm_dense(A - dec.B @ dec.P))
+    assert abs(est - exact) / exact < 0.05
+
+
+# --------------------------------------------------------------- properties
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 4), st.integers(0, 4),
+       st.booleans(), st.sampled_from(["srft", "srht", "gaussian"]))
+def test_property_rid_error_bound(k, dm, dn, cplx, kind):
+    """Paper eq. (3): ||A - BP||_2 <= 50 sqrt(mn) (1/eps)^(1/k) sigma_{k+1},
+    checked on exactly-rank-k matrices where sigma_{k+1} is roundoff."""
+    m, n = 80 + 37 * dm, 64 + 29 * dn
+    key = jax.random.key(k * 1000 + dm * 100 + dn * 10 + cplx)
+    A = lowrank(key, m, n, min(k, m, n), cplx=cplx)
+    dec = rid(jax.random.fold_in(key, 1), A, k, sketch_kind=kind)
+    err = float(spectral_norm_dense(A - dec.reconstruct()))
+    sigma_floor = expected_sigma_kp1(m, n)   # paper's noise-floor estimate
+    assert err <= error_bound(m, n, k, eps=1e-20) * sigma_floor * 10
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 3))
+def test_property_rid_idempotent_on_exact_rank(k, seed):
+    """Decomposing an exactly rank-k matrix at rank k is (near-)exact and
+    reconstruction is a projection: rid(BP) == BP (numerically)."""
+    key = jax.random.key(seed)
+    A = lowrank(key, 150, 120, k)
+    dec = rid(jax.random.fold_in(key, 2), A, k, sketch_kind="gaussian")
+    A2 = dec.reconstruct()
+    dec2 = rid(jax.random.fold_in(key, 3), A2, k, sketch_kind="gaussian")
+    assert float(spectral_norm_dense(A2 - dec2.reconstruct())) < 1e-9 * \
+        max(1.0, float(spectral_norm_dense(A2)))

@@ -1,0 +1,131 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU with the same
+blocking semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (fwht_pallas, project_out, sketch_matmul,
+                           srht_pallas, tsolve)
+from repro.kernels.cgs.ref import project_out_ref
+from repro.kernels.srht.ref import fwht_ref, srht_ref
+from repro.kernels.sketch_matmul.ref import sketch_matmul_ref as matmul_ref
+from repro.kernels.tsolve.ref import tsolve_ref
+
+
+def key(i=0):
+    return jax.random.key(i)
+
+
+# --------------------------------------------------------------- sketch gemm
+
+@pytest.mark.parametrize("l,m,n", [(8, 64, 32), (32, 300, 150), (100, 777, 129),
+                                   (128, 512, 256), (17, 1024, 31)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sketch_matmul_sweep(l, m, n, dtype):
+    om = jax.random.normal(key(1), (l, m), dtype=dtype)
+    a = jax.random.normal(key(2), (m, n), dtype=dtype)
+    got = sketch_matmul(om, a)
+    want = matmul_ref(om, a)
+    # accumulation-order differences scale with sqrt(m) for N(0,1) inputs
+    atol = (1e-5 if dtype == jnp.float32 else 2e-2) * np.sqrt(m)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_sketch_matmul_complex():
+    om = (jax.random.normal(key(1), (16, 100)) +
+          1j * jax.random.normal(key(2), (16, 100))).astype(jnp.complex64)
+    a = (jax.random.normal(key(3), (100, 40)) +
+         1j * jax.random.normal(key(4), (100, 40))).astype(jnp.complex64)
+    np.testing.assert_allclose(np.asarray(sketch_matmul(om, a)),
+                               np.asarray(om @ a), atol=1e-3)
+
+
+# --------------------------------------------------------------------- fwht
+
+@pytest.mark.parametrize("m", [2, 64, 256, 8192, 16384])   # incl. 4-step split
+@pytest.mark.parametrize("n", [1, 5, 128, 200])
+def test_fwht_sweep(m, n):
+    if m * n > 1 << 22:
+        pytest.skip("too large for CI sweep")
+    x = jax.random.normal(key(3), (m, n), dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(fwht_pallas(x)),
+                               np.asarray(fwht_ref(x)), atol=1e-4)
+
+
+def test_srht_full():
+    m, n, l = 700, 96, 32                       # non-pow2 m exercises padding
+    a = jax.random.normal(key(4), (m, n), dtype=jnp.float32)
+    signs = jax.random.rademacher(key(5), (m,), dtype=jnp.float32)
+    mp = 1024
+    rows = jax.random.randint(key(6), (l,), 0, mp)
+    got = srht_pallas(signs, a, rows)
+    # oracle on the padded matrix
+    ap = jnp.pad(signs[:, None] * a, ((0, mp - m), (0, 0)))
+    want = fwht_ref(ap)[rows] * jnp.sqrt(mp / l)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ----------------------------------------------------------------- cgs block
+
+@pytest.mark.parametrize("l,k,n", [(16, 4, 30), (64, 16, 200), (128, 32, 513),
+                                   (256, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_project_out_sweep(l, k, n, dtype):
+    q = jnp.linalg.qr(jax.random.normal(key(7), (l, k)))[0].astype(dtype)
+    z = jax.random.normal(key(8), (l, n), dtype=dtype)
+    got = project_out(q, z)
+    want = project_out_ref(q, z)
+    atol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+    if dtype == jnp.float32:
+        # the residual really is orthogonal to the basis
+        assert float(jnp.max(jnp.abs(q.T @ got))) < 1e-3
+
+
+# ------------------------------------------------------------------- tsolve
+
+@pytest.mark.parametrize("k,n", [(4, 16), (32, 100), (100, 257), (128, 128),
+                                 (200, 64)])
+def test_tsolve_sweep(k, n):
+    r1 = jnp.triu(jax.random.normal(key(9), (k, k), dtype=jnp.float32)) \
+        + 3.0 * jnp.eye(k)
+    r2 = jax.random.normal(key(10), (k, n), dtype=jnp.float32)
+    got = tsolve(r1, r2)
+    want = tsolve_ref(r1, r2)
+    # both are f32 solves with different accumulation order; agreement is
+    # bounded by the recurrence depth — compare with depth-scaled tolerance
+    # and check the RESIDUAL (the invariant that actually matters) tightly.
+    sol_scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4 * k * sol_scale)
+    resid = np.asarray(jnp.triu(r1) @ got - r2)
+    assert np.max(np.abs(resid)) < 2e-5 * k * sol_scale
+
+
+# -------------------------------------------------------------- flash attn
+
+@pytest.mark.parametrize("S,T,H,hd,causal,window", [
+    (100, 100, 3, 16, True, None),
+    (65, 129, 2, 8, True, None),      # rectangular + padding
+    (64, 64, 2, 16, True, 24),        # sliding window
+    (48, 80, 1, 32, False, None),     # non-causal (whisper encoder)
+])
+def test_flash_attention_kernel(S, T, H, hd, causal, window):
+    from repro.kernels.flash.ops import flash_attention
+    from repro.kernels.flash.ref import flash_ref
+    B = 2
+    kq, kk, kv = jax.random.split(key(11), 3)
+    q = jax.random.normal(kq, (B, S, H, hd), dtype=jnp.float32)
+    k = jax.random.normal(kk, (B, T, H, hd), dtype=jnp.float32)
+    v = jax.random.normal(kv, (B, T, H, hd), dtype=jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=32, bk=32)
+    tohm = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], hd)
+    want = flash_ref(tohm(q) * hd ** -0.5, tohm(k), tohm(v),
+                     causal=causal, window=window)
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

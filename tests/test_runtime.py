@@ -1,0 +1,71 @@
+"""Fault-tolerance runtime logic (coordinator, elastic planning, stragglers)."""
+import pytest
+
+from repro.runtime import (Coordinator, HostFailure, StragglerMonitor,
+                           plan_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_coordinator_detects_silence():
+    clk = FakeClock()
+    c = Coordinator(4, timeout_s=10.0, clock=clk)
+    clk.t = 5.0
+    for h in range(4):
+        c.heartbeat(h)
+    c.check()
+    clk.t = 14.0
+    for h in (0, 1, 2):
+        c.heartbeat(h)
+    c.check()                      # host 3 is at 9s silence: still fine
+    clk.t = 16.0
+    with pytest.raises(HostFailure) as ei:
+        c.check()
+    assert ei.value.dead_hosts == [3]
+    assert ei.value.alive == 3
+
+
+def test_coordinator_rejoin():
+    clk = FakeClock()
+    c = Coordinator(2, timeout_s=1.0, clock=clk)
+    c.mark_dead(1)
+    with pytest.raises(HostFailure):
+        c.check()
+    c.rejoin(1)
+    c.heartbeat(1)
+    c.check()                      # healthy again
+
+
+def test_plan_elastic_mesh():
+    # full multi-pod fleet
+    assert plan_elastic_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    # one pod lost -> single pod
+    assert plan_elastic_mesh(256) == ((16, 16), ("data", "model"))
+    # partial pod: largest power-of-two data axis, model preserved
+    shape, axes = plan_elastic_mesh(200)
+    assert shape == (8, 16) and axes == ("data", "model")
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8)
+
+
+def test_straggler_tiers():
+    m = StragglerMonitor(4, threshold=1.5, rank_tiers=(32, 16, 8))
+    for h in range(4):
+        for _ in range(5):
+            m.record(h, 1.0 if h != 2 else 2.5)
+    assert m.stragglers() == [2]
+    assert m.compression_rank == 32
+    assert m.adapt() is True
+    assert m.compression_rank == 16
+    # straggler recovers -> tier climbs back
+    for _ in range(30):
+        m.record(2, 1.0)
+    assert m.stragglers() == []
+    assert m.adapt() is True
+    assert m.compression_rank == 32

@@ -12,13 +12,13 @@ def main():
     k, m, n, nproc = map(int, sys.argv[1:5])
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.compat import AxisType, make_mesh
 
     from repro.core.distributed import rid_distributed
     from repro.launch.dryrun import collective_bytes
 
-    mesh = jax.make_mesh((nproc,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh((nproc,), ("data",),
+                     axis_types=(AxisType.Auto,))
     key = jax.random.key(0)
     A = jax.ShapeDtypeStruct((m, n), jnp.float32)
 

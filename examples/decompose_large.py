@@ -18,13 +18,13 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 from repro.core import rid_distributed, shard_columns, spectral_norm_dense
 from repro.core.errors import error_bound, expected_sigma_kp1
 
 ndev = len(jax.devices())
-mesh = jax.make_mesh((ndev,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((ndev,), ("data",), axis_types=(AxisType.Auto,))
 print(f"mesh: {ndev} devices, axis 'data' (column-parallel)")
 
 key = jax.random.key(1)

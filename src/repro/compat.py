@@ -1,0 +1,69 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the jax >= 0.5 spellings (``jax.shard_map``
+with ``check_vma=``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); the container ships jax 0.4.37 where those
+are ``jax.experimental.shard_map.shard_map(..., check_rep=...)``,
+``jax.make_mesh`` without ``axis_types``, and no ``AxisType`` at all.
+Everything that touches those symbols routes through here so the rest of
+the tree stays written in one dialect.
+
+Exports:
+  AxisType   — ``jax.sharding.AxisType`` when present, else a sentinel
+               enum with the same member names (``Auto``/``Explicit``/
+               ``Manual``) that ``make_mesh`` below knows to drop.
+  make_mesh  — ``jax.make_mesh`` that accepts ``axis_types=`` on every
+               jax version and silently drops it when unsupported.
+  shard_map  — keyword-style ``shard_map(f, mesh=..., in_specs=...,
+               out_specs=..., check_vma=...)`` resolving to whichever
+               implementation the installed jax provides, translating
+               ``check_vma`` <-> ``check_rep``.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["AxisType", "make_mesh", "shard_map"]
+
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.x: meshes have no axis types; use a sentinel
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    _HAS_AXIS_TYPE = False
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Optional[Sequence[Any]] = None,
+              axis_types: Optional[Sequence[Any]] = None) -> Mesh:
+    """``jax.make_mesh`` accepting ``axis_types=`` on every jax version."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.5: top-level, check_vma kwarg
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # jax 0.4.x: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map_04(f, mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)

@@ -5,6 +5,8 @@ Public API:
   rsvd, rsvd_from_id         — randomized SVD built on the ID
   sketch / srft / srht / gaussian — the randomization operators (paper eq. 4)
   cgs2_pivoted_qr            — the paper's iterated classical Gram-Schmidt QR
+  blocked_pivoted_qr         — blocked-panel pivoted QR (GEMM-bound fast path)
+  pivoted_qr                 — qr_impl dispatcher ('cgs2' | 'blocked')
   householder_qr, cholesky_qr2 — beyond-paper panel factorizations
   solve_upper_triangular     — the column-parallel interpolation solve
   rid_distributed            — shard_map column-parallel RID (paper section 3)
@@ -12,7 +14,8 @@ Public API:
 """
 from .errors import error_bound, expected_sigma_kp1, spectral_error, spectral_norm_dense
 from .distributed import rid_distributed, shard_columns
-from .qr import cgs2_pivoted_qr, cholesky_qr2, householder_qr
+from .qr import (blocked_pivoted_qr, cgs2_pivoted_qr, cholesky_qr2,
+                 householder_qr, pivoted_qr)
 from .rid import rid, rid_from_sketch
 from .rsvd import rsvd, rsvd_from_id
 from .sketch import fwht, gaussian_sketch, next_pow2, sketch, srft_sketch, srht_sketch
@@ -22,7 +25,8 @@ from .types import IDResult, QRResult, SketchResult, SVDResult
 __all__ = [
     "rid", "rid_from_sketch", "rsvd", "rsvd_from_id",
     "sketch", "srft_sketch", "srht_sketch", "gaussian_sketch", "fwht", "next_pow2",
-    "cgs2_pivoted_qr", "householder_qr", "cholesky_qr2",
+    "cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr",
+    "householder_qr", "cholesky_qr2",
     "solve_upper_triangular", "solve_upper_triangular_xla", "interp_from_qr",
     "rid_distributed", "shard_columns",
     "spectral_error", "spectral_norm_dense", "error_bound", "expected_sigma_kp1",

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .qr import cgs2_pivoted_qr
+from ..compat import shard_map
+from .qr import pivoted_qr
 from .sketch import sketch as _sketch
 from .tsolve import solve_upper_triangular_xla
 from .types import IDResult
@@ -41,14 +42,15 @@ def shard_columns(A: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
     return jax.device_put(A, NamedSharding(mesh, P(None, axis)))
 
 
-def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str):
+def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
+                  qr_impl: str, qr_panel: int):
     """Per-device body; identical randomness on every device via a
     replicated key, so the replicated QR is bitwise identical too."""
 
     def fn(key, A_loc):
         Y_loc = _sketch(key, A_loc, l, kind=sketch_kind).Y          # (l, n_loc), no comm
         Y = lax.all_gather(Y_loc, axis, axis=1, tiled=True)          # (l, n) tiny gather
-        qr = cgs2_pivoted_qr(Y, k)                                   # replicated compute
+        qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel)          # replicated compute
         R1 = jnp.take(qr.R, qr.piv, axis=1)
         P_loc = solve_upper_triangular_xla(R1, _conj_t(qr.Q) @ Y_loc)  # no comm
         # Exact-identity scatter for pivot columns that live in this shard.
@@ -69,11 +71,16 @@ def _conj_t(x):
 def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
                     mesh: Mesh, axis: str = "data",
                     l: Optional[int] = None,
-                    sketch_kind: str = "gaussian") -> IDResult:
+                    sketch_kind: str = "gaussian",
+                    qr_impl: str = "cgs2",
+                    qr_panel: int = 32) -> IDResult:
     """Rank-``k`` randomized ID of a column-sharded ``A``.
 
     Returns an ``IDResult`` whose ``P`` stays column-sharded over ``axis``
     and whose ``B`` is the gathered ``m x k`` pivot-column panel.
+    ``qr_impl`` selects the replicated pivoted-QR engine ('cgs2' oracle or
+    'blocked' panel-GEMM — see ``core.qr``); both run identically on every
+    device from the bitwise-identical gathered sketch.
     """
     l = 2 * k if l is None else l
     n = A.shape[1]
@@ -81,12 +88,13 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
     if n % ndev:
         raise ValueError(f"n={n} must divide the '{axis}' axis ({ndev} devices)")
 
-    fn = _local_rid_fn(k, l, sketch_kind, axis)
+    fn = _local_rid_fn(k, l, sketch_kind, axis, qr_impl, qr_panel)
     # check_vma=False: the QR runs replicated on the gathered sketch — every
     # device computes bitwise-identical (Q, R, piv) from identical inputs, so
     # the unmapped out_specs are sound even though the rep-checker cannot
-    # prove it through the fori_loop carry.
-    mapped = jax.shard_map(
+    # prove it through the fori_loop carry.  (``compat.shard_map`` translates
+    # this to check_rep=False on jax 0.4.x.)
+    mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(), P(None, axis)),
         out_specs=(P(None, axis), P(), P(), P()),

@@ -15,6 +15,18 @@ Beyond-paper options (DESIGN.md section 2):
 * ``cholesky_qr2``    — two rounds of ``Q = Y @ chol(Y^H Y)^-H``; turns
   orthonormalization into pure MXU matmuls (the TPU-native winner for
   well-conditioned panels, used by the RSVD path).
+* ``blocked_pivoted_qr`` — the production pivoted factorization: pivots
+  are selected a PANEL (default 32 columns) at a time by residual norm,
+  each panel is orthonormalized with the tall-panel routines above, and
+  the trailing residual is deflated with ONE GEMM pair per panel
+  (``Z -= Q_p (Q_p^H Z)``) instead of one rank-1 update per column.
+  Same O(lkn) flops as CGS2, but MXU/GEMM-bound instead of VPU/GEMV-
+  bound, and k/b trailing updates instead of k.
+
+Callers choose via ``pivoted_qr(Y, k, impl=...)`` with
+``impl in {"cgs2", "blocked"}`` — ``cgs2`` is the paper-faithful parity
+oracle, ``blocked`` the fast path.  ``rid``/``rsvd``/``rid_distributed``
+expose the same switch as ``qr_impl``.
 """
 from __future__ import annotations
 
@@ -26,12 +38,31 @@ from jax import lax
 
 from .types import QRResult
 
-__all__ = ["cgs2_pivoted_qr", "householder_qr", "cholesky_qr2"]
+__all__ = ["cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr",
+           "householder_qr", "cholesky_qr2"]
 
 
 def _h(x: jax.Array) -> jax.Array:
     """Conjugate transpose that is a plain transpose for real dtypes."""
     return x.conj().T if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.T
+
+
+def _masked_res2(Z: jax.Array, picked: jax.Array, rdtype) -> jax.Array:
+    """Residual column norms^2 with picked columns at the -1 sentinel."""
+    res2 = jnp.sum(jnp.abs(Z) ** 2, axis=0).astype(rdtype)
+    return jnp.where(picked, jnp.asarray(-1.0, rdtype), res2)
+
+
+def _downdate_res2(res2: jax.Array, w: jax.Array, p: jax.Array) -> jax.Array:
+    """Downdate norms^2 after selecting pivot ``p`` with coefficients
+    ``w = Z^H q``.  Picked columns carry a negative sentinel that the
+    downdate must PRESERVE (clamping them to 0 would re-admit them — a
+    duplicate pivot — once every live residual hits the noise floor)."""
+    rdtype = res2.dtype
+    res2 = jnp.where(res2 < 0, res2,
+                     jnp.maximum(res2 - jnp.abs(w) ** 2,
+                                 jnp.zeros((), rdtype)))
+    return res2.at[p].set(jnp.asarray(-1.0, rdtype))
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -72,8 +103,7 @@ def cgs2_pivoted_qr(Y: jax.Array, k: int) -> QRResult:
         # work unit the XMT ran one-thread-per-column).
         w = _h(Z) @ v                      # (n,) coefficients Z^H q
         Z = Z - v[:, None] * w.conj()[None, :]
-        res2 = jnp.maximum(res2 - jnp.abs(w) ** 2, jnp.zeros((), rdtype))
-        res2 = res2.at[p].set(jnp.asarray(-1.0, rdtype))   # never re-pick
+        res2 = _downdate_res2(res2, w, p)  # sentinel-preserving: never re-pick
         return Q, piv, Z, res2
 
     Q0 = jnp.zeros((l, k), dtype)
@@ -145,3 +175,157 @@ def cholesky_qr2(Y: jax.Array) -> tuple[jax.Array, jax.Array]:
     Q2, C2 = one_round(Q1)
     R = _h(C2) @ _h(C1)                        # upper triangular k x k
     return Q2, R
+
+
+# --------------------------------------------------------------------------
+# Blocked-panel pivoted QR (the MXU-bound replacement for the CGS2 loop)
+# --------------------------------------------------------------------------
+
+def _panel_select_cgs2(Z: jax.Array, Q_prev: jax.Array, picked: jax.Array,
+                       b: int) -> tuple[jax.Array, jax.Array]:
+    """Adaptive per-column pivot selection for ONE panel — the robust
+    fallback when the one-shot top-``b`` candidates are (near-)collinear
+    (duplicate columns, rank-deficient sketches).
+
+    Runs ``b`` steps of the oracle's greedy loop, but with the trailing
+    update DEFERRED: residual norms are downdated GEQP3-style
+    (``res2 -= |q^H Z|^2``) instead of rewriting ``Z`` rank-1 per column,
+    so the expensive ``Z`` mutation still happens once per panel in the
+    caller's GEMM.  Each pivot is CGS2-orthogonalized against the prior
+    basis AND the panel built so far, which keeps junk directions from
+    zero-residual columns orthonormal exactly like the oracle does.
+    """
+    l, n = Z.shape
+    dtype = Z.dtype
+    rdtype = jnp.finfo(dtype).dtype
+    tiny = jnp.finfo(rdtype).tiny
+    res2 = _masked_res2(Z, picked, rdtype)
+
+    def body(j, state):
+        Qp, idx, res2 = state
+        p = jnp.argmax(res2).astype(jnp.int32)
+        v = lax.dynamic_slice_in_dim(Z, p, 1, axis=1)[:, 0]
+        v = v / jnp.maximum(jnp.linalg.norm(v), tiny).astype(dtype)
+        # Three projection passes, not CGS2's two: a noise-floor column can
+        # be a bitwise COPY of an earlier junk pick, so pass 1 collapses it
+        # entirely into the span and the renormalized remainder needs two
+        # further passes to reach machine-precision orthogonality.
+        for _ in range(3):
+            v = v - Q_prev @ (_h(Q_prev) @ v)
+            v = v - Qp @ (_h(Qp) @ v)          # cols >= j still zero: safe
+            v = v / jnp.maximum(jnp.linalg.norm(v), tiny).astype(dtype)
+        Qp = lax.dynamic_update_slice_in_dim(Qp, v[:, None], j, axis=1)
+        idx = idx.at[j].set(p)
+        w = _h(Z) @ v                          # norm downdate, no Z write
+        res2 = _downdate_res2(res2, w, p)
+        return Qp, idx, res2
+
+    Qp, idx, _ = lax.fori_loop(
+        0, b, body,
+        (jnp.zeros((l, b), dtype), jnp.zeros((b,), jnp.int32), res2))
+    return Qp, idx
+
+
+def _panel_orthonormalize(Z: jax.Array, idx: jax.Array, Q_prev: jax.Array,
+                          picked: jax.Array,
+                          panel_impl: str) -> tuple[jax.Array, jax.Array]:
+    """Orthonormal basis for the panel ``Z[:, idx]`` (l x b), orthogonal to
+    ``Q_prev``; returns ``(Q_panel, idx)`` where ``idx`` may be REPLACED by
+    an adaptive re-selection when the candidates are degenerate.
+
+    The panel comes from the deflated residual, so it is already orthogonal
+    to ``Q_prev`` up to one-pass CGS error; the block re-projection here is
+    the "2" of CGS2 at panel granularity.  ``panel_impl``:
+
+      "chol"  — CholeskyQR2, pure GEMM (fastest; needs kappa under ~1e7);
+      "house" — Householder panel QR (benchmark reference);
+      "auto"  — CholeskyQR2, with a ``lax.cond`` fallback to the adaptive
+                per-column selection when the Gram cholesky degenerates
+                (NaNs or lost orthogonality).  Generic sketches never take
+                the fallback; duplicate-column inputs do.
+    """
+    C = jnp.take(Z, idx, axis=1)
+    rdtype = jnp.finfo(C.dtype).dtype
+    if Q_prev.shape[1]:
+        C = C - Q_prev @ (_h(Q_prev) @ C)
+    if panel_impl == "house":
+        return householder_qr(C)[0], idx
+    Qp, _ = cholesky_qr2(C)
+    if panel_impl == "chol":
+        return Qp, idx
+    b = C.shape[1]
+    err = jnp.max(jnp.abs(_h(Qp) @ Qp - jnp.eye(b, dtype=C.dtype)))
+    ok = jnp.all(jnp.isfinite(Qp)) & (err < jnp.sqrt(jnp.finfo(rdtype).eps))
+    return lax.cond(ok, lambda: (Qp, idx),
+                    lambda: _panel_select_cgs2(Z, Q_prev, picked, b))
+
+
+@partial(jax.jit, static_argnames=("k", "panel", "panel_impl"))
+def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
+                       panel_impl: str = "auto") -> QRResult:
+    """Blocked-panel greedy-pivoted thin QR of the wide sketch ``Y`` (l x n).
+
+    Per panel of ``b = panel`` pivots:
+
+      1. residual column norms of the deflated ``Z`` rank the candidates;
+         the top-``b`` unpicked columns become this panel's pivots
+         (``lax.top_k`` — the panel analogue of the paper's greedy argmax);
+      2. the panel is orthonormalized against the prior basis and itself
+         (``cholesky_qr2`` fast path, per-column CGS2 fallback — see
+         ``_panel_orthonormalize``);
+      3. the trailing residual deflates with ONE GEMM pair,
+         ``Z -= Q_p (Q_p^H Z)``, replacing ``b`` rank-1 GEMV updates.
+
+    Pivot ORDER within a panel follows residual-norm rank at panel entry,
+    so the pivot set may differ from ``cgs2_pivoted_qr``'s on near-ties —
+    the ID quality is the same (see tests/test_qr_blocked.py).
+
+    Returns ``QRResult(Q, R, piv)`` with ``R = Q^H Y``; ``R[:, piv]`` is
+    upper triangular up to orthogonalization error, exactly like the
+    oracle's contract.
+    """
+    l, n = Y.shape
+    if not (0 < k <= min(l, n)):
+        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, Y of shape {Y.shape}")
+    if panel < 1:
+        raise ValueError(f"need panel >= 1, got {panel}")
+    if panel_impl not in ("auto", "chol", "house"):
+        raise ValueError(f"unknown panel_impl {panel_impl!r}")
+    dtype = Y.dtype
+    rdtype = jnp.finfo(dtype).dtype
+
+    Q = jnp.zeros((l, k), dtype)
+    piv = jnp.zeros((k,), jnp.int32)
+    picked = jnp.zeros((n,), bool)
+    Z = Y
+    off = 0
+    while off < k:                              # static unroll: k/b panels
+        b = min(panel, k - off)
+        res2 = _masked_res2(Z, picked, rdtype)
+        _, idx = lax.top_k(res2, b)
+        idx = idx.astype(jnp.int32)
+        Qp, idx = _panel_orthonormalize(Z, idx, Q[:, :off], picked, panel_impl)
+        Z = Z - Qp @ (_h(Qp) @ Z)               # the ONE GEMM-pair deflation
+        Q = Q.at[:, off:off + b].set(Qp)
+        piv = piv.at[off:off + b].set(idx)
+        picked = picked.at[idx].set(True)
+        off += b
+    R = _h(Q) @ Y
+    return QRResult(Q=Q, R=R, piv=piv)
+
+
+def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "cgs2",
+               panel: int = 32) -> QRResult:
+    """Dispatch the pivoted QR of the sketch.
+
+    ``impl="cgs2"``    — the paper's per-column iterated Gram-Schmidt
+                         (parity oracle, O(k) sequential GEMV steps).
+    ``impl="blocked"`` — the blocked-panel engine above (O(k/panel)
+                         sequential GEMM steps; production default
+                         candidate, ~MXU-bound).
+    """
+    if impl == "cgs2":
+        return cgs2_pivoted_qr(Y, k)
+    if impl == "blocked":
+        return blocked_pivoted_qr(Y, k, panel=panel)
+    raise ValueError(f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")

@@ -9,6 +9,15 @@ Pipeline (paper section 2):                      cost (paper's accounting)
 ``rid`` is jit-compatible (k, l static).  Every stage takes an explicit
 PRNG key; the same key reproduces the same decomposition bit-for-bit,
 which the fault-tolerance layer relies on for replay.
+
+Step 2 has two engines, selected by ``qr_impl``:
+
+  * ``"cgs2"``    — the paper's per-column iterated Gram-Schmidt
+                    (``cgs2_pivoted_qr``), kept as the parity oracle;
+  * ``"blocked"`` — the blocked-panel engine (``blocked_pivoted_qr``):
+                    panel-at-a-time pivoting with one GEMM-pair trailing
+                    update per panel (``qr_panel`` columns, default 32),
+                    the MXU-bound production path.
 """
 from __future__ import annotations
 
@@ -18,7 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .qr import cgs2_pivoted_qr
+from .qr import pivoted_qr
 from .sketch import sketch
 from .tsolve import interp_from_qr
 from .types import IDResult
@@ -26,10 +35,11 @@ from .types import IDResult
 __all__ = ["rid", "rid_from_sketch"]
 
 
-@partial(jax.jit, static_argnames=("k",))
-def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int) -> IDResult:
+@partial(jax.jit, static_argnames=("k", "qr_impl", "qr_panel"))
+def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int, *,
+                    qr_impl: str = "cgs2", qr_panel: int = 32) -> IDResult:
     """Steps 2-4 given an existing sketch ``Y`` (l x n)."""
-    qr = cgs2_pivoted_qr(Y, k)
+    qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel)
     P = interp_from_qr(qr.R, qr.piv)
     B = jnp.take(A, qr.piv, axis=1)
     # P is in sketch dtype (complex for SRFT); B carries A's dtype.  Cast P
@@ -42,7 +52,8 @@ def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int) -> IDResult:
 
 
 def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
-        sketch_kind: str = "srft") -> IDResult:
+        sketch_kind: str = "srft", qr_impl: str = "cgs2",
+        qr_panel: int = 32) -> IDResult:
     """Rank-``k`` randomized ID of ``A``: ``A ~= B @ P``.
 
     Args:
@@ -51,9 +62,11 @@ def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
       k: target rank (static).
       l: sketch rows; defaults to the paper's universal choice ``l = 2k``.
       sketch_kind: 'srft' (paper-faithful) | 'srht' | 'gaussian'.
+      qr_impl: 'cgs2' (paper-faithful oracle) | 'blocked' (panel GEMM engine).
+      qr_panel: panel width for the blocked engine (ignored by cgs2).
     """
     l = 2 * k if l is None else l
     if l < k:
         raise ValueError(f"need l >= k, got l={l} < k={k}")
     Y = sketch(key, A, l, kind=sketch_kind).Y
-    return rid_from_sketch(A, Y, k)
+    return rid_from_sketch(A, Y, k, qr_impl=qr_impl, qr_panel=qr_panel)

@@ -2,7 +2,9 @@
 
   sketch_matmul — tiled MXU GEMM for the Gaussian sketch Y = Omega A
   srht          — blocked fast Walsh-Hadamard transform (TPU-native SRFT)
-  cgs           — fused Gram-Schmidt block deflation Z - Q (Q^T Z)
+  cgs           — fused Gram-Schmidt block deflation Z - Q (Q^T Z), plus
+                  the panel trailing update (Z - Q_p W, W = Q_p^T Z) of
+                  the blocked pivoted QR
   tsolve        — column-parallel blocked triangular solve (paper eq. 10)
   flash         — FlashAttention with causal block skipping (the LM
                   stack's hot-spot; beyond-paper)
@@ -10,11 +12,11 @@
 Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
 (jit'd wrapper, interpret=True off-TPU) and ref.py (pure-jnp oracle).
 """
-from .cgs.ops import project_out
+from .cgs.ops import panel_deflate, project_out
 from .flash.ops import flash_attention
 from .sketch_matmul.ops import sketch_matmul
 from .srht.ops import fwht as fwht_pallas, srht as srht_pallas
 from .tsolve.ops import tsolve
 
-__all__ = ["project_out", "flash_attention", "sketch_matmul",
+__all__ = ["project_out", "panel_deflate", "flash_attention", "sketch_matmul",
            "fwht_pallas", "srht_pallas", "tsolve"]

@@ -13,6 +13,14 @@ an intermediate of different shape).
 
 The kernel is used by the blocked CGS2 panel QR (benchmarks/bench_qr.py)
 and by the re-orthogonalization passes of the gradient compressor.
+
+``panel_deflate_kernel`` below is its panel-QR sibling, designed as the
+on-device trailing update of ``core.qr.blocked_pivoted_qr`` (which today
+deflates with plain jnp GEMMs — fusing it in is a ROADMAP open item):
+same fused GEMM pair, but the basis is one narrow PANEL ``Q_p`` (l x b,
+b ~ 32) and the coefficient block ``W = Q_p^H Z`` is emitted as a second
+output, since the fused engine will need it for the panel's rows of
+``R`` without re-reading ``Z`` from HBM.
 """
 from __future__ import annotations
 
@@ -49,5 +57,44 @@ def project_out_kernel(q: jax.Array, z: jax.Array, *, bn: int = 128,
         ],
         out_specs=pl.BlockSpec((l, bn), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((l, n), z.dtype),
+        interpret=interpret,
+    )(q, z)
+
+
+def _panel_deflate_kernel(q_ref, z_ref, o_ref, w_ref):
+    q = q_ref[...]                       # (l, b) panel basis
+    z = z_ref[...]                       # (l, bn)
+    acc = acc_dtype_for(z.dtype)
+    w = jnp.dot(q.T, z, preferred_element_type=acc)          # (b, bn)  MXU
+    qw = jnp.dot(q, w.astype(q.dtype), preferred_element_type=acc)
+    o_ref[...] = (z.astype(acc) - qw).astype(z.dtype)
+    w_ref[...] = w.astype(z.dtype)
+
+
+def panel_deflate_kernel(q: jax.Array, z: jax.Array, *, bn: int = 128,
+                         interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call for the panel trailing update.  Pre-padded: bn | n.
+
+    Returns ``(Z - Q_p W, W)`` with ``W = Q_p^T Z`` — both computed in one
+    VMEM round trip over each ``Z`` slab.
+    """
+    l, b = q.shape
+    l2, n = z.shape
+    assert l == l2 and n % bn == 0, (q.shape, z.shape, bn)
+    return pl.pallas_call(
+        _panel_deflate_kernel,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((l, b), lambda j: (0, 0)),   # panel, revisited per slab
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+            pl.BlockSpec((b, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, n), z.dtype),
+            jax.ShapeDtypeStruct((b, n), z.dtype),
+        ],
         interpret=interpret,
     )(q, z)

@@ -1,4 +1,4 @@
-"""Jit'd wrapper for the CGS block-deflation kernel."""
+"""Jit'd wrappers for the CGS block-deflation kernels."""
 from __future__ import annotations
 
 from functools import partial
@@ -7,9 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from ..common import interpret_default, pad_to, round_up
-from .kernel import project_out_kernel
+from .kernel import panel_deflate_kernel, project_out_kernel
 
-__all__ = ["project_out"]
+__all__ = ["project_out", "panel_deflate"]
 
 
 @partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -26,3 +26,24 @@ def project_out(q: jax.Array, z: jax.Array, *, bn: int = 128,
     np_ = round_up(n, bn)
     out = project_out_kernel(q, pad_to(z, (l, np_)), bn=bn, interpret=interpret)
     return out[:, :n]
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def panel_deflate(q: jax.Array, z: jax.Array, *, bn: int = 128,
+                  interpret: bool | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Panel trailing update ``(z - q (q^T z), q^T z)`` with ``q`` (l x b)
+    one orthonormal PANEL of the blocked pivoted QR and ``z`` (l x n) the
+    trailing residual.  Real dtypes take the fused Pallas path (one VMEM
+    round trip per ``z`` slab for both outputs); complex falls back to the
+    oracle formula like ``project_out``."""
+    interpret = interpret_default() if interpret is None else interpret
+    if jnp.issubdtype(z.dtype, jnp.complexfloating) or \
+            jnp.issubdtype(q.dtype, jnp.complexfloating):
+        w = q.conj().T @ z
+        return z - q @ w, w
+    l, n = z.shape
+    np_ = round_up(n, bn)
+    out, w = panel_deflate_kernel(q, pad_to(z, (l, np_)), bn=bn,
+                                  interpret=interpret)
+    return out[:, :n], w[:, :n]

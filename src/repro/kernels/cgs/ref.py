@@ -14,3 +14,13 @@ def project_out_ref(q: jax.Array, z: jax.Array) -> jax.Array:
     w = jnp.dot(q.T, z, preferred_element_type=acc)
     return (z.astype(acc) - jnp.dot(q, w.astype(q.dtype),
                                     preferred_element_type=acc)).astype(z.dtype)
+
+
+def panel_deflate_ref(q: jax.Array, z: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Panel trailing update of the blocked pivoted QR: returns
+    ``(z - q (q^T z), q^T z)`` for the orthonormal panel ``q`` (l x b)."""
+    acc = acc_dtype_for(z.dtype)
+    w = jnp.dot(q.T, z, preferred_element_type=acc)
+    o = (z.astype(acc) - jnp.dot(q, w.astype(q.dtype),
+                                 preferred_element_type=acc)).astype(z.dtype)
+    return o, w.astype(z.dtype)

@@ -13,7 +13,9 @@ import math
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import AxisType, make_mesh
 
 SINGLE_POD = ((16, 16), ("data", "model"))
 MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
@@ -29,8 +31,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"mesh {shape} needs {n} devices, found {len(devs)} — the dry-run "
             f"sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"before any jax import")
-    return jax.make_mesh(shape, axes, devices=devs[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devs[:n],
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model: Optional[int] = None) -> Mesh:
@@ -43,17 +45,17 @@ def make_host_mesh(model: Optional[int] = None) -> Mesh:
         while model * 2 <= n and n % (model * 2) == 0 and model * 2 <= 4:
             model *= 2
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=devs[:data * model],
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     devices=devs[:data * model],
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def make_elastic_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     """Mesh for a re-planned (post-failure) topology — see
     runtime.coordinator.plan_elastic_mesh."""
     n = math.prod(shape)
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=jax.devices()[:n],
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:

@@ -67,21 +67,30 @@ class ServeEngine:
         return [s for s in range(self.max_batch) if s not in self._active]
 
     def _admit(self):
-        """Prefill waiting requests into free slots."""
-        for slot in self._free_slots():
-            if not self._queue:
-                break
+        """Prefill waiting requests into free slots.
+
+        A request whose FIRST greedy token already completes it (EOS, or
+        ``max_new_tokens == 1``) is marked done here and never occupies a
+        decode slot — the slot stays free for the next queued request.
+        """
+        free = self._free_slots()
+        while free and self._queue:
             req = self._queue.pop(0)
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, caches1 = self._prefill_one(self.params, toks)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.output.append(nxt)
+            if ((req.eos_token is not None and nxt == req.eos_token)
+                    or len(req.output) >= req.max_new_tokens):
+                req.done = True
+                continue
+            slot = free.pop(0)
             # Copy the single-sequence cache into this slot of the shared
             # cache (leading dims: [pattern pos][n_super, batch, ...]).
             self._caches = jax.tree.map(
                 lambda full, one: full.at[:, slot:slot + 1].set(
                     one.astype(full.dtype)),
                 self._caches, caches1)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.output.append(nxt)
             self._active[slot] = req
             self._pos[slot] = len(req.prompt)
             self._last_tok[slot, 0] = nxt

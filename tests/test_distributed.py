@@ -12,7 +12,8 @@ from repro.core import rid_distributed, rid, spectral_norm_dense
 key = jax.random.key(0)
 m, n, k = 512, 400, 12
 A = jax.random.normal(key, (m, k)) @ jax.random.normal(jax.random.fold_in(key,1), (k, n))
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import AxisType, make_mesh
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 dec = rid_distributed(jax.random.key(2), A, k, mesh=mesh, axis="data", sketch_kind="gaussian")
 err = float(spectral_norm_dense(A - dec.B @ dec.P)) / float(spectral_norm_dense(A))
 assert err < 1e-4, err
@@ -25,15 +26,16 @@ print("OK", err)
     assert "OK" in r.stdout
 
 
+@pytest.mark.slow
 def test_train_step_sharded_with_compression(subproc):
     r = subproc("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.configs import get_smoke_config
 from repro.launch.steps import TrainConfig, jit_train_step, init_train_state
 from repro.optim import CompressorConfig
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
 cfg = get_smoke_config("granite_3_2b")
 key = jax.random.key(7)
 B, S = 8, 32
@@ -58,17 +60,19 @@ print("OK", losses)
     assert "OK" in r.stdout
 
 
+@pytest.mark.slow
 def test_elastic_reshard_restore(subproc):
     """Save on a 2x2x2 ('pod','data','model') mesh, restore onto 4x2 —
     the failure-recovery path (mesh-agnostic checkpoints)."""
     r = subproc("""
 import tempfile, jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import AxisType, make_mesh
 from repro.checkpoint import save_pytree, restore_pytree
 
 devs = jax.devices()
-mesh_a = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
-mesh_b = jax.make_mesh((4,2), ("data","model"), devices=devs, axis_types=(AxisType.Auto,)*2)
+mesh_a = make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh_b = make_mesh((4,2), ("data","model"), devices=devs, axis_types=(AxisType.Auto,)*2)
 x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 xa = jax.device_put(x, NamedSharding(mesh_a, P(("pod","data"), "model")))
 d = tempfile.mkdtemp()
@@ -83,12 +87,13 @@ print("OK")
     assert "OK" in r.stdout
 
 
+@pytest.mark.slow
 def test_train_loop_failure_recovery(subproc):
     """End-to-end: train, inject a host failure, elastic re-plan, restore
     from checkpoint on the smaller mesh, losses replay deterministically."""
     r = subproc("""
 import tempfile, jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.configs import get_smoke_config
 from repro.launch.steps import TrainConfig
 from repro.launch.train import train_loop
@@ -97,7 +102,7 @@ from repro.runtime import HostFailure, plan_elastic_mesh
 cfg = get_smoke_config("xlstm_125m")
 tcfg = TrainConfig(peak_lr=1e-3, warmup_steps=2, total_steps=12)
 ck = tempfile.mkdtemp()
-mesh_a = jax.make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
+mesh_a = make_mesh((2,2,2), ("pod","data","model"), axis_types=(AxisType.Auto,)*3)
 # run 1: fails at step 9 (after the step-8 checkpoint)
 try:
     train_loop(cfg, tcfg, mesh_a, global_batch=8, seq_len=32, steps=12,
@@ -107,7 +112,7 @@ except HostFailure as e:
     alive = 8 - len(e.dead_hosts)
 shape, axes = plan_elastic_mesh(alive_chips=6, model_axis=2, chips_per_pod=4)
 assert shape == (2, 2) and axes == ("data", "model"), (shape, axes)
-mesh_b = jax.make_mesh(shape, axes, devices=jax.devices()[:4], axis_types=(AxisType.Auto,)*2)
+mesh_b = make_mesh(shape, axes, devices=jax.devices()[:4], axis_types=(AxisType.Auto,)*2)
 import shutil, os
 ck_copy = tempfile.mkdtemp(); shutil.rmtree(ck_copy); shutil.copytree(ck, ck_copy)
 out_b = train_loop(cfg, tcfg, mesh_b, global_batch=8, seq_len=32, steps=12,

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (fwht_pallas, project_out, sketch_matmul,
-                           srht_pallas, tsolve)
-from repro.kernels.cgs.ref import project_out_ref
+from repro.kernels import (fwht_pallas, panel_deflate, project_out,
+                           sketch_matmul, srht_pallas, tsolve)
+from repro.kernels.cgs.ref import panel_deflate_ref, project_out_ref
 from repro.kernels.srht.ref import fwht_ref, srht_ref
 from repro.kernels.sketch_matmul.ref import sketch_matmul_ref as matmul_ref
 from repro.kernels.tsolve.ref import tsolve_ref
@@ -84,6 +84,20 @@ def test_project_out_sweep(l, k, n, dtype):
     if dtype == jnp.float32:
         # the residual really is orthogonal to the basis
         assert float(jnp.max(jnp.abs(q.T @ got))) < 1e-3
+
+
+@pytest.mark.parametrize("l,b,n", [(16, 4, 30), (64, 32, 200), (256, 32, 513)])
+def test_panel_deflate_matches_ref(l, b, n):
+    q = jnp.linalg.qr(jax.random.normal(key(11), (l, b)))[0]
+    z = jax.random.normal(key(12), (l, n), dtype=jnp.float32)
+    got_o, got_w = panel_deflate(q, z)
+    want_o, want_w = panel_deflate_ref(q, z)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w), atol=1e-4)
+    # deflated slab is orthogonal to the panel; W really is Q^T Z
+    assert float(jnp.max(jnp.abs(q.T @ got_o))) < 1e-3
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(q.T @ z),
+                               atol=1e-4)
 
 
 # ------------------------------------------------------------------- tsolve

@@ -23,6 +23,7 @@ def make_batch(cfg, B=2, S=16):
 
 # ----------------------------------------------------------- per-arch smoke
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward_backward(arch):
     """Reduced config: one train step's forward+backward on CPU — output
@@ -43,6 +44,7 @@ def test_smoke_forward_backward(arch):
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["h2o_danube_1_8b", "jamba_v01_52b",
                                   "xlstm_125m", "whisper_tiny", "qwen2_vl_2b",
                                   "phi35_moe"])

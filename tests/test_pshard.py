@@ -17,10 +17,10 @@ def test_hint_noop_without_mesh():
 def test_hint_in_subprocess_mesh(subproc):
     r = subproc("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.models.pshard import hint, dp_axes
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"),
                      axis_types=(AxisType.Auto,) * 3)
 with mesh:
     # dp token resolves to (pod, data); divisible dims get sharded

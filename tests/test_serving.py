@@ -19,6 +19,7 @@ def small_model():
     return cfg, init_params(KEY, cfg)
 
 
+@pytest.mark.slow
 def test_engine_continuous_batching(small_model):
     cfg, params = small_model
     eng = ServeEngine(cfg, params, max_batch=3, max_len=64)
@@ -35,6 +36,7 @@ def test_engine_continuous_batching(small_model):
     assert all(len(r.output) == 6 for r in done)
 
 
+@pytest.mark.slow
 def test_engine_matches_reference_greedy(small_model):
     cfg, params = small_model
     eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
@@ -54,6 +56,7 @@ def test_engine_matches_reference_greedy(small_model):
     assert req.output == ref
 
 
+@pytest.mark.slow
 def test_engine_eos_stops(small_model):
     cfg, params = small_model
     prompt = np.arange(4, dtype=np.int32)

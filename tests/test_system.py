@@ -11,6 +11,7 @@ from repro.launch.steps import (TrainConfig, init_train_state,
                                 jit_train_step)
 
 
+@pytest.mark.slow
 def test_train_learns_synthetic_task():
     """40 steps on the smallest config must already cut the loss — the
     whole stack (data -> model -> loss -> AdamW) wired correctly."""
@@ -33,6 +34,7 @@ def test_train_learns_synthetic_task():
     assert min(losses[-5:]) < losses[0] - 0.3, losses[:3] + losses[-3:]
 
 
+@pytest.mark.slow
 def test_train_step_is_deterministic():
     cfg = get_smoke_config("granite_3_2b")
     mesh = make_host_mesh()

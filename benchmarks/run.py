@@ -22,6 +22,10 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true",
                     help="skip the subprocess-heavy Figures 1-2 section")
+    ap.add_argument("--bench-json", default="BENCH_scaling.json",
+                    help="machine-readable scaling record (shapes, device "
+                         "counts, wall times, bytes-per-device) — the perf "
+                         "trajectory tracked across PRs")
     args = ap.parse_args()
     flags = ["--full"] if args.full else []
     t0 = time.time()
@@ -40,11 +44,22 @@ def main():
     section("Table 5: ||A - BP||_2 + eq.(3) bound")
     bench_error.main(flags)
     if not args.skip_scaling:
+        import os
+        if args.bench_json and os.path.exists(args.bench_json):
+            os.remove(args.bench_json)     # fresh record per harness run
+        js = ["--json", args.bench_json] if args.bench_json else []
         section("Figures 1-2: structural parallel scaling")
-        bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6"])
+        bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6",
+                            *js])
         section("Figures 1-2 at the paper's full sizes (lowering-only)")
         bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "0,6",
-                            "--paper"])
+                            "--paper", *js])
+        section("Weak scaling: panel-parallel QRCP vs gather-and-replicate")
+        for impl in ("blocked", "panel_parallel"):
+            bench_scaling.main(["--procs", "4,8,16", "--rows", "1",
+                                "--weak", "--exec", "--qr-impl", impl, *js])
+        if args.bench_json:
+            print(f"\nwrote {args.bench_json}")
     section("Roofline (from dry-run artifacts)")
     roofline.main([])
     print(f"\nbenchmarks completed in {time.time() - t0:.0f}s")

@@ -5,17 +5,21 @@ Public API:
   rsvd, rsvd_from_id         — randomized SVD built on the ID
   sketch / srft / srht / gaussian — the randomization operators (paper eq. 4)
   cgs2_pivoted_qr            — the paper's iterated classical Gram-Schmidt QR
-  blocked_pivoted_qr         — blocked-panel pivoted QR (GEMM-bound fast path)
-  pivoted_qr                 — qr_impl dispatcher ('cgs2' | 'blocked')
+  blocked_pivoted_qr         — blocked-panel pivoted QR (GEMM-bound default)
+  pivoted_qr                 — qr_impl dispatcher ('blocked' | 'cgs2')
   householder_qr, cholesky_qr2 — beyond-paper panel factorizations
+  panel_parallel_pivoted_qr  — distributed QRCP over a column-sharded sketch
+                               (no per-device l x n replication — qr_dist)
   solve_upper_triangular     — the column-parallel interpolation solve
-  rid_distributed            — shard_map column-parallel RID (paper section 3)
+  rid_distributed            — shard_map column-parallel RID (paper section 3;
+                               qr_impl in {'cgs2','blocked','panel_parallel'})
   spectral_error, error_bound — paper eq. (3) validation utilities
 """
 from .errors import error_bound, expected_sigma_kp1, spectral_error, spectral_norm_dense
 from .distributed import rid_distributed, shard_columns
 from .qr import (blocked_pivoted_qr, cgs2_pivoted_qr, cholesky_qr2,
                  householder_qr, pivoted_qr)
+from .qr_dist import panel_parallel_pivoted_qr
 from .rid import rid, rid_from_sketch
 from .rsvd import rsvd, rsvd_from_id
 from .sketch import fwht, gaussian_sketch, next_pow2, sketch, srft_sketch, srht_sketch
@@ -26,6 +30,7 @@ __all__ = [
     "rid", "rid_from_sketch", "rsvd", "rsvd_from_id",
     "sketch", "srft_sketch", "srht_sketch", "gaussian_sketch", "fwht", "next_pow2",
     "cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr",
+    "panel_parallel_pivoted_qr",
     "householder_qr", "cholesky_qr2",
     "solve_upper_triangular", "solve_upper_triangular_xla", "interp_from_qr",
     "rid_distributed", "shard_columns",

@@ -3,17 +3,28 @@ parallelization (section 3.2) mapped onto a TPU mesh.
 
 Layout: ``A`` is sharded BY COLUMNS over one mesh axis (the paper's
 "each processor owns columns"; on the XMT this was loop-level, here it is
-mesh-level).  The three phases then cost:
+mesh-level).  Phase costs by ``qr_impl``:
 
-  sketch      : zero communication — every backend acts on the row index
-                only, so each device sketches its own column block.
-  pivoted QR  : one ``all_gather`` of the tiny ``l x n_local`` sketches
-                (l = 2k rows), then REPLICATED CGS2 on every device.  This
-                is the paper's "the only slow, serial-ish part runs on a
-                very tiny matrix" — at mesh scale the tiny matrix is
-                cheaper to recompute everywhere than to factor cooperatively.
-  interp solve: zero communication — each device solves ``R1 T = R2`` for
-                its own column block (paper: "column-wise in parallel").
+  sketch        : zero communication — every backend acts on the row index
+                  only, so each device sketches its own column block.
+  pivoted QR    :
+    'cgs2' /    one ``all_gather`` of the ``l x n_local`` sketches, then
+    'blocked'   REPLICATED factorization on every device.  Per device:
+                O(l n) gathered bytes and memory, O(l k n) redundant flops.
+                Fine while the sketch fits one device; it caps matrix size
+                at a single device's HBM.
+    'panel_     NO replication (``core.qr_dist``): each device factors its
+    parallel'   own ``l x n_local`` shard in place.  Per PANEL of ``b``
+                pivots: one psum of the n residual norms (O(n) bytes) for
+                global pivot selection, one ``l x b`` psum gathering the
+                owners' candidate columns, replicated CholeskyQR2 on the
+                tiny panel (fused Gram+coefficients — ``kernels/
+                panel_gram``), then shard-local deflation.  Per device:
+                O(l n/ndev + l b) memory, O(l k n/ndev) flops, and
+                O(k/b * (n + l b)) communicated bytes total — the sketch
+                width now scales with the mesh, not one device.
+  interp solve  : zero communication — each device solves ``R1 T = R2`` for
+                  its own column block (paper: "column-wise in parallel").
 
 The pivot-column gather ``B = A[:, J]`` is the only cross-shard data
 motion proportional to ``m`` and moves just ``m x k`` elements.
@@ -29,12 +40,15 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .qr import pivoted_qr
+from .qr import _h as _conj_t, pivoted_qr
+from .qr_dist import gather_columns_psum, panel_parallel_qr_local
 from .sketch import sketch as _sketch
 from .tsolve import solve_upper_triangular_xla
 from .types import IDResult
 
 __all__ = ["rid_distributed", "shard_columns"]
+
+QR_IMPLS = ("cgs2", "blocked", "panel_parallel")
 
 
 def shard_columns(A: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
@@ -42,62 +56,112 @@ def shard_columns(A: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
     return jax.device_put(A, NamedSharding(mesh, P(None, axis)))
 
 
+def _identity_at_owned_pivots(P_loc: jax.Array, piv: jax.Array, axis: str
+                              ) -> jax.Array:
+    """Exact-identity scatter for pivot columns that live in this shard."""
+    n_loc = P_loc.shape[1]
+    off = lax.axis_index(axis) * n_loc
+    cols = off + jnp.arange(n_loc, dtype=jnp.int32)
+    match = cols[None, :] == piv[:, None]                    # (k, n_loc)
+    return jnp.where(match.any(axis=0)[None, :], match.astype(P_loc.dtype),
+                     P_loc)
+
+
 def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
                   qr_impl: str, qr_panel: int):
-    """Per-device body; identical randomness on every device via a
-    replicated key, so the replicated QR is bitwise identical too."""
+    """Per-device body for the REPLICATED-QR path; identical randomness on
+    every device via a replicated key, so the replicated QR is bitwise
+    identical too."""
 
     def fn(key, A_loc):
         Y_loc = _sketch(key, A_loc, l, kind=sketch_kind).Y          # (l, n_loc), no comm
-        Y = lax.all_gather(Y_loc, axis, axis=1, tiled=True)          # (l, n) tiny gather
+        Y = lax.all_gather(Y_loc, axis, axis=1, tiled=True)          # (l, n) full gather
         qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel)          # replicated compute
         R1 = jnp.take(qr.R, qr.piv, axis=1)
         P_loc = solve_upper_triangular_xla(R1, _conj_t(qr.Q) @ Y_loc)  # no comm
-        # Exact-identity scatter for pivot columns that live in this shard.
-        n_loc = A_loc.shape[1]
-        off = lax.axis_index(axis) * n_loc
-        cols = off + jnp.arange(n_loc, dtype=jnp.int32)
-        match = cols[None, :] == qr.piv[:, None]                     # (k, n_loc)
-        P_loc = jnp.where(match.any(axis=0)[None, :], match.astype(P_loc.dtype), P_loc)
+        P_loc = _identity_at_owned_pivots(P_loc, qr.piv, axis)
         return P_loc, qr.piv, qr.Q, qr.R
 
     return fn
 
 
-def _conj_t(x):
-    return x.conj().T if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.T
+def _local_rid_panel_parallel_fn(k: int, l: int, sketch_kind: str, axis: str,
+                                 ndev: int, qr_panel: int):
+    """Per-device body for the PANEL-PARALLEL path: the sketch shard is
+    factored in place (``core.qr_dist``) — no ``l x n`` array per device."""
+
+    def fn(key, A_loc):
+        Y_loc = _sketch(key, A_loc, l, kind=sketch_kind).Y           # (l, n_loc)
+        Q, piv, R_loc = panel_parallel_qr_local(
+            Y_loc, k, axis=axis, ndev=ndev, panel=qr_panel)
+        # R1 = Q^H Y[:, piv] is exactly the pivot columns of the sharded
+        # R = Q^H Y — a k x k psum gather, no extra GEMM.
+        R1 = gather_columns_psum(R_loc, piv, axis)
+        P_loc = solve_upper_triangular_xla(R1, R_loc)                # no comm
+        P_loc = _identity_at_owned_pivots(P_loc, piv, axis)
+        return P_loc, piv, Q, R_loc
+
+    return fn
 
 
 def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
                     mesh: Mesh, axis: str = "data",
                     l: Optional[int] = None,
                     sketch_kind: str = "gaussian",
-                    qr_impl: str = "cgs2",
+                    qr_impl: str = "blocked",
                     qr_panel: int = 32) -> IDResult:
     """Rank-``k`` randomized ID of a column-sharded ``A``.
 
     Returns an ``IDResult`` whose ``P`` stays column-sharded over ``axis``
     and whose ``B`` is the gathered ``m x k`` pivot-column panel.
-    ``qr_impl`` selects the replicated pivoted-QR engine ('cgs2' oracle or
-    'blocked' panel-GEMM — see ``core.qr``); both run identically on every
-    device from the bitwise-identical gathered sketch.
+    ``qr_impl`` selects the pivoted-QR engine:
+
+      'cgs2' / 'blocked'  — gather-and-replicate (the parity oracles; both
+                            run identically on every device from the
+                            bitwise-identical gathered sketch — see
+                            ``core.qr``);
+      'panel_parallel'    — factor the column shards in place with panel
+                            pivots from psum-reduced norms and panel-sized
+                            gathers (``core.qr_dist``) — no ``l x n``
+                            sketch per device, so sketch width scales
+                            with the mesh.  ``R`` comes back column-
+                            sharded over ``axis`` instead of replicated.
+
+    ``qr_panel`` is the panel width for 'blocked' and 'panel_parallel'
+    (ignored by 'cgs2').
     """
     l = 2 * k if l is None else l
     n = A.shape[1]
+    if l < k:
+        raise ValueError(f"need l >= k, got l={l} < k={k}")
+    if not (0 < k <= min(l, n)):
+        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, l={l}, n={n}")
+    if qr_impl not in QR_IMPLS:
+        raise ValueError(f"unknown qr impl {qr_impl!r}; expected one of "
+                         f"{QR_IMPLS}")
+    if qr_panel < 1:
+        raise ValueError(f"need qr_panel >= 1, got {qr_panel}")
     ndev = mesh.shape[axis]
     if n % ndev:
         raise ValueError(f"n={n} must divide the '{axis}' axis ({ndev} devices)")
 
-    fn = _local_rid_fn(k, l, sketch_kind, axis, qr_impl, qr_panel)
-    # check_vma=False: the QR runs replicated on the gathered sketch — every
-    # device computes bitwise-identical (Q, R, piv) from identical inputs, so
-    # the unmapped out_specs are sound even though the rep-checker cannot
-    # prove it through the fori_loop carry.  (``compat.shard_map`` translates
-    # this to check_rep=False on jax 0.4.x.)
+    if qr_impl == "panel_parallel":
+        fn = _local_rid_panel_parallel_fn(k, l, sketch_kind, axis, ndev,
+                                          qr_panel)
+        r_spec = P(None, axis)       # R stays column-sharded, never gathered
+    else:
+        fn = _local_rid_fn(k, l, sketch_kind, axis, qr_impl, qr_panel)
+        r_spec = P()                 # R is replicated by the redundant QR
+    # check_vma=False: the replicated outputs (piv, Q, and R on the
+    # gather-and-replicate path) are bitwise identical on every device —
+    # either recomputed from identical gathered inputs or produced by
+    # collectives — but the rep-checker cannot prove it through the loop
+    # carries.  (``compat.shard_map`` translates this to check_rep=False on
+    # jax 0.4.x.)
     mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(), P(None, axis)),
-        out_specs=(P(None, axis), P(), P(), P()),
+        out_specs=(P(None, axis), P(), P(), r_spec),
         check_vma=False,
     )
     P_sh, piv, Q, R = jax.jit(mapped)(key, A)

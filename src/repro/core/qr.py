@@ -314,18 +314,23 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
     return QRResult(Q=Q, R=R, piv=piv)
 
 
-def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "cgs2",
-               panel: int = 32) -> QRResult:
+def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
+               panel: int = 32, panel_impl: str = "auto") -> QRResult:
     """Dispatch the pivoted QR of the sketch.
 
     ``impl="cgs2"``    — the paper's per-column iterated Gram-Schmidt
                          (parity oracle, O(k) sequential GEMV steps).
     ``impl="blocked"`` — the blocked-panel engine above (O(k/panel)
-                         sequential GEMM steps; production default
-                         candidate, ~MXU-bound).
+                         sequential GEMM steps; the production default,
+                         ~MXU-bound).  ``panel_impl`` picks its panel
+                         factorization ('auto' | 'chol' | 'house' — see
+                         ``blocked_pivoted_qr``); ignored by cgs2.
+
+    (The distributed-only 'panel_parallel' engine lives in
+    ``core.qr_dist`` — it needs a mesh axis, not a replicated ``Y``.)
     """
     if impl == "cgs2":
         return cgs2_pivoted_qr(Y, k)
     if impl == "blocked":
-        return blocked_pivoted_qr(Y, k, panel=panel)
+        return blocked_pivoted_qr(Y, k, panel=panel, panel_impl=panel_impl)
     raise ValueError(f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")

@@ -12,12 +12,12 @@ which the fault-tolerance layer relies on for replay.
 
 Step 2 has two engines, selected by ``qr_impl``:
 
-  * ``"cgs2"``    — the paper's per-column iterated Gram-Schmidt
-                    (``cgs2_pivoted_qr``), kept as the parity oracle;
   * ``"blocked"`` — the blocked-panel engine (``blocked_pivoted_qr``):
                     panel-at-a-time pivoting with one GEMM-pair trailing
                     update per panel (``qr_panel`` columns, default 32),
-                    the MXU-bound production path.
+                    the MXU-bound production DEFAULT;
+  * ``"cgs2"``    — the paper's per-column iterated Gram-Schmidt
+                    (``cgs2_pivoted_qr``), kept as the parity oracle.
 """
 from __future__ import annotations
 
@@ -37,7 +37,7 @@ __all__ = ["rid", "rid_from_sketch"]
 
 @partial(jax.jit, static_argnames=("k", "qr_impl", "qr_panel"))
 def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int, *,
-                    qr_impl: str = "cgs2", qr_panel: int = 32) -> IDResult:
+                    qr_impl: str = "blocked", qr_panel: int = 32) -> IDResult:
     """Steps 2-4 given an existing sketch ``Y`` (l x n)."""
     qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel)
     P = interp_from_qr(qr.R, qr.piv)
@@ -52,7 +52,7 @@ def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int, *,
 
 
 def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
-        sketch_kind: str = "srft", qr_impl: str = "cgs2",
+        sketch_kind: str = "srft", qr_impl: str = "blocked",
         qr_panel: int = 32) -> IDResult:
     """Rank-``k`` randomized ID of ``A``: ``A ~= B @ P``.
 
@@ -62,7 +62,8 @@ def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
       k: target rank (static).
       l: sketch rows; defaults to the paper's universal choice ``l = 2k``.
       sketch_kind: 'srft' (paper-faithful) | 'srht' | 'gaussian'.
-      qr_impl: 'cgs2' (paper-faithful oracle) | 'blocked' (panel GEMM engine).
+      qr_impl: 'blocked' (panel GEMM engine, the production default) |
+        'cgs2' (the paper-faithful parity oracle).
       qr_panel: panel width for the blocked engine (ignored by cgs2).
     """
     l = 2 * k if l is None else l

@@ -33,7 +33,7 @@ def rsvd_from_id(dec: IDResult) -> SVDResult:
 
 
 def rsvd(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
-         sketch_kind: str = "gaussian", qr_impl: str = "cgs2",
+         sketch_kind: str = "gaussian", qr_impl: str = "blocked",
          qr_panel: int = 32) -> SVDResult:
     """Rank-``k`` randomized SVD of ``A`` via the ID.  ``qr_impl`` selects
     the pivoted-QR engine of the underlying ID (see ``core.qr``)."""

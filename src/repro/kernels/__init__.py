@@ -5,6 +5,8 @@
   cgs           — fused Gram-Schmidt block deflation Z - Q (Q^T Z), plus
                   the panel trailing update (Z - Q_p W, W = Q_p^T Z) of
                   the blocked pivoted QR
+  panel_gram    — fused panel Gram + coefficient pass (C^H C, C^H Z_loc)
+                  for the panel-parallel distributed QRCP (core.qr_dist)
   tsolve        — column-parallel blocked triangular solve (paper eq. 10)
   flash         — FlashAttention with causal block skipping (the LM
                   stack's hot-spot; beyond-paper)
@@ -14,9 +16,10 @@ Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
 """
 from .cgs.ops import panel_deflate, project_out
 from .flash.ops import flash_attention
+from .panel_gram.ops import panel_gram
 from .sketch_matmul.ops import sketch_matmul
 from .srht.ops import fwht as fwht_pallas, srht as srht_pallas
 from .tsolve.ops import tsolve
 
-__all__ = ["project_out", "panel_deflate", "flash_attention", "sketch_matmul",
-           "fwht_pallas", "srht_pallas", "tsolve"]
+__all__ = ["project_out", "panel_deflate", "panel_gram", "flash_attention",
+           "sketch_matmul", "fwht_pallas", "srht_pallas", "tsolve"]

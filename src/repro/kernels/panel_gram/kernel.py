@@ -1,0 +1,65 @@
+"""Fused panel-Gram kernel for the distributed CholeskyQR2 panel step:
+one VMEM pass over the local residual shard computes BOTH
+
+  G = C^H C           (b x b)      the Gram the panel Cholesky factors
+  V = C^H Z_local     (b x n_loc)  the trailing coefficient block
+
+with the candidate panel ``C`` (l x b) resident in VMEM across slabs.
+Unfused, the panel-parallel QR (``core.qr_dist``) would read ``Z_local``
+once for the Gram inputs and again for the coefficients; fusing them is
+the panel analogue of ``kernels/cgs.panel_deflate`` (ROADMAP: "fuse the
+whole panel step").  The b x b triangular solves that turn (G, V) into
+``Q_p`` and ``W = Q_p^H Z_local`` stay outside the kernel — they are
+O(b^3)/O(b^2 n) on tiny operands and XLA handles them fine.
+
+  grid = (n / bn,)
+  per step:  load C (l x b, broadcast over steps) + Z slab (l x bn)
+             V slab = C^H Z   (b x bn)  MXU
+             G      = C^H C   (b x b)   MXU, emitted on the FIRST step
+                                        only (every step would recompute
+                                        the identical product)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import acc_dtype_for, cdiv
+
+
+def _panel_gram_kernel(c_ref, z_ref, g_ref, v_ref):
+    c = c_ref[...]                       # (l, b) candidate panel
+    z = z_ref[...]                       # (l, bn) residual slab
+    acc = acc_dtype_for(z.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _emit_gram():
+        g_ref[...] = jnp.dot(c.T, c, preferred_element_type=acc).astype(z.dtype)
+
+    v_ref[...] = jnp.dot(c.T, z, preferred_element_type=acc).astype(z.dtype)
+
+
+def panel_gram_kernel(c: jax.Array, z: jax.Array, *, bn: int = 128,
+                      interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call.  Pre-padded: bn | n.  Returns ``(C^T C, C^T Z)``."""
+    l, b = c.shape
+    l2, n = z.shape
+    assert l == l2 and n % bn == 0, (c.shape, z.shape, bn)
+    return pl.pallas_call(
+        _panel_gram_kernel,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((l, b), lambda j: (0, 0)),   # panel, revisited per slab
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, b), lambda j: (0, 0)),   # written on step 0 only
+            pl.BlockSpec((b, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, b), z.dtype),
+            jax.ShapeDtypeStruct((b, n), z.dtype),
+        ],
+        interpret=interpret,
+    )(c, z)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused panel-Gram pass ``(C^H C, C^H Z)``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import acc_dtype_for
+
+
+def _h(x: jax.Array) -> jax.Array:
+    return x.conj().T if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.T
+
+
+def panel_gram_ref(c: jax.Array, z: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gram of the candidate panel ``c`` (l x b) and its coefficient block
+    against the residual shard ``z`` (l x n): ``(c^H c, c^H z)``."""
+    acc = acc_dtype_for(z.dtype)
+    if jnp.issubdtype(z.dtype, jnp.complexfloating):
+        return _h(c) @ c, _h(c) @ z
+    g = jnp.dot(c.T, c, preferred_element_type=acc).astype(z.dtype)
+    v = jnp.dot(c.T, z, preferred_element_type=acc).astype(z.dtype)
+    return g, v

@@ -28,13 +28,17 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--rid-rank", type=int, default=0,
                     help="compress weights with the paper's RID (0 = off)")
+    ap.add_argument("--qr-impl", default="blocked",
+                    choices=["cgs2", "blocked"],
+                    help="pivoted-QR engine for the compression RSVD")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(jax.random.key(0), cfg)
     if args.rid_rank:
         params, report = compress_params(jax.random.key(1), params,
-                                         rank=args.rid_rank)
+                                         rank=args.rid_rank,
+                                         qr_impl=args.qr_impl)
         print(compression_report(report))
 
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,

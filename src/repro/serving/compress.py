@@ -53,13 +53,14 @@ def low_rank_targets(params: Any) -> list[str]:
     return out
 
 
-def _maybe_compress(key, W, rank, energy_keep):
+def _maybe_compress(key, W, rank, energy_keep, qr_impl):
     """RSVD-probe one matrix; factor if rank-k keeps enough energy."""
     m, n = W.shape
     k = min(rank, m, n)
     if k * (m + n) >= m * n:      # factorization would not shrink anything
         return None
-    dec = rsvd(key, W.astype(jnp.float32), k, sketch_kind="gaussian")
+    dec = rsvd(key, W.astype(jnp.float32), k, sketch_kind="gaussian",
+               qr_impl=qr_impl)
     total = jnp.sum(W.astype(jnp.float32) ** 2)
     kept = jnp.sum(dec.S ** 2)
     if float(kept / jnp.maximum(total, 1e-30)) < energy_keep:
@@ -70,9 +71,12 @@ def _maybe_compress(key, W, rank, energy_keep):
 
 
 def compress_params(key: jax.Array, params: Any, *, rank: int,
-                    energy_keep: float = 0.95) -> tuple[Any, dict]:
+                    energy_keep: float = 0.95,
+                    qr_impl: str = "blocked") -> tuple[Any, dict]:
     """Replace eligible leaves with LowRankWeight factors (stacked leaves
-    are factored per-slice with a shared rank).  Returns (tree, report)."""
+    are factored per-slice with a shared rank).  Returns (tree, report).
+    ``qr_impl`` selects the pivoted-QR engine of the probing RSVD
+    ('blocked' production default | 'cgs2' oracle — see ``core.qr``)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out, report = [], {}
     for i, (path, leaf) in enumerate(flat):
@@ -82,13 +86,13 @@ def compress_params(key: jax.Array, params: Any, *, rank: int,
             continue
         if leaf.ndim == 2:
             lw = _maybe_compress(jax.random.fold_in(key, i), leaf, rank,
-                                 energy_keep)
+                                 energy_keep, qr_impl)
         else:                      # stacked (n_super, ..., m, n)
             lead = leaf.shape[:-2]
             m, n = leaf.shape[-2:]
             flat_leaf = leaf.reshape((-1, m, n))
             lws = [_maybe_compress(jax.random.fold_in(key, i * 997 + j),
-                                   flat_leaf[j], rank, energy_keep)
+                                   flat_leaf[j], rank, energy_keep, qr_impl)
                    for j in range(flat_leaf.shape[0])]
             if all(lw is not None for lw in lws):
                 B = jnp.stack([lw.B for lw in lws]).reshape(lead + (m, -1))

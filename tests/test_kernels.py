@@ -6,9 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (fwht_pallas, panel_deflate, project_out,
-                           sketch_matmul, srht_pallas, tsolve)
+from repro.kernels import (fwht_pallas, panel_deflate, panel_gram,
+                           project_out, sketch_matmul, srht_pallas, tsolve)
 from repro.kernels.cgs.ref import panel_deflate_ref, project_out_ref
+from repro.kernels.panel_gram.ref import panel_gram_ref
 from repro.kernels.srht.ref import fwht_ref, srht_ref
 from repro.kernels.sketch_matmul.ref import sketch_matmul_ref as matmul_ref
 from repro.kernels.tsolve.ref import tsolve_ref
@@ -98,6 +99,34 @@ def test_panel_deflate_matches_ref(l, b, n):
     assert float(jnp.max(jnp.abs(q.T @ got_o))) < 1e-3
     np.testing.assert_allclose(np.asarray(got_w), np.asarray(q.T @ z),
                                atol=1e-4)
+
+
+# --------------------------------------------------------------- panel gram
+
+@pytest.mark.parametrize("l,b,n", [(16, 4, 30), (64, 32, 200), (256, 32, 513),
+                                   (48, 7, 129)])
+def test_panel_gram_matches_ref(l, b, n):
+    c = jax.random.normal(key(13), (l, b), dtype=jnp.float32)
+    z = jax.random.normal(key(14), (l, n), dtype=jnp.float32)
+    got_g, got_v = panel_gram(c, z)
+    want_g, want_v = panel_gram_ref(c, z)
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(want_g), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), atol=1e-3)
+    # the fused outputs really are the Gram and the coefficient block
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(c.T @ c), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(c.T @ z), atol=1e-3)
+
+
+def test_panel_gram_complex_fallback():
+    c = (jax.random.normal(key(15), (32, 8)) +
+         1j * jax.random.normal(key(16), (32, 8))).astype(jnp.complex64)
+    z = (jax.random.normal(key(17), (32, 50)) +
+         1j * jax.random.normal(key(18), (32, 50))).astype(jnp.complex64)
+    got_g, got_v = panel_gram(c, z)
+    np.testing.assert_allclose(np.asarray(got_g), np.asarray(c.conj().T @ c),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(c.conj().T @ z),
+                               atol=1e-3)
 
 
 # ------------------------------------------------------------------- tsolve

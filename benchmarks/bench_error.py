@@ -9,7 +9,10 @@ This is a PAPER-PARITY check, so the QR engine pins the paper's CGS2
 oracle rather than following the production default: the blocked/panel
 engines trade a little pivot quality per panel width (within 10x of the
 oracle — tests/test_qr_blocked.py) which can exceed eq.(3)'s constant at
-the largest SMALL_GRID ranks.  Probe them with ``--qr-impl blocked``.
+the largest SMALL_GRID ranks.  Probe them with ``--qr-impl blocked``,
+which defaults ``--qr-panel`` to the dispatcher's "auto" heuristic
+(``core.qr.resolve_panel``: 16-column panels in the bound-critical
+small-k regime, 32 otherwise) so the bound holds across the grid.
 """
 from __future__ import annotations
 
@@ -37,14 +40,20 @@ def main(argv=None):
     ap.add_argument("--qr-impl", default="cgs2", choices=["cgs2", "blocked"],
                     help="pivoted-QR engine (default: the paper's CGS2 "
                          "oracle — this bench checks paper parity)")
+    ap.add_argument("--qr-panel", default="auto",
+                    help="blocked-engine panel width: an int, or 'auto' "
+                         "for the eq.(3)-aware heuristic (narrow panels "
+                         "when k is small relative to l; ignored by cgs2)")
     args = ap.parse_args(argv)
+    qr_panel = args.qr_panel if args.qr_panel == "auto" else int(args.qr_panel)
     grid = PAPER_GRID if args.full else SMALL_GRID
     rows = []
     for i, case in enumerate(grid):
         key = jax.random.key(case.k + 13)
         A = lowrank_complex(key, case.m, case.n, case.k, jnp.complex128)
         dec = rid(jax.random.fold_in(key, 3), A, case.k,
-                  sketch_kind=args.sketch, qr_impl=args.qr_impl)
+                  sketch_kind=args.sketch, qr_impl=args.qr_impl,
+                  qr_panel=qr_panel)
         err = float(spectral_error(jax.random.fold_in(key, 4), A, dec.B,
                                    dec.P, iters=40))
         floor = expected_sigma_kp1(case.m, case.n)

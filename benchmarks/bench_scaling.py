@@ -118,12 +118,8 @@ def main(argv=None):
                       f"of distributed RID (v5e roofline model, "
                       f"qr_impl={args.qr_impl}, {mode} scaling)")
     if args.json:
-        existing = []
-        if os.path.exists(args.json):
-            with open(args.json) as f:
-                existing = json.load(f)
-        with open(args.json, "w") as f:
-            json.dump(existing + rows, f, indent=1)
+        from .common import append_json_rows
+        append_json_rows(args.json, rows)
     return rows
 
 

@@ -1,10 +1,34 @@
-"""Shared benchmark utilities: robust timing + CSV emission."""
+"""Shared benchmark utilities: robust timing, CSV emission, and the
+jax-version-spanning ``compiled.cost_analysis()`` normalization every
+lowering-based bench needs."""
 from __future__ import annotations
 
 import time
 from typing import Callable
 
+import json
+import os
+
 import jax
+
+# Canonical home is the version-shim module; re-exported here so every
+# lowering-based bench (scaling_worker, bench_qr's fused sweep) keeps one
+# import site for its utilities.
+from repro.compat import normalize_cost_analysis  # noqa: F401
+
+
+def append_json_rows(path: str, rows: list[dict]) -> None:
+    """Append ``rows`` to the JSON list at ``path`` (created if absent) —
+    the single implementation of the ``BENCH_scaling.json`` record
+    contract shared by bench_scaling and bench_qr's fused sweep.
+    benchmarks/run.py (and the CI bench job) delete the file up front so
+    each harness run starts a fresh record."""
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    with open(path, "w") as f:
+        json.dump(existing + rows, f, indent=1)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

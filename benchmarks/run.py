@@ -30,6 +30,11 @@ def main():
     flags = ["--full"] if args.full else []
     t0 = time.time()
 
+    import os
+    if args.bench_json and os.path.exists(args.bench_json):
+        os.remove(args.bench_json)         # fresh record per harness run
+    js = ["--json", args.bench_json] if args.bench_json else []
+
     from . import (bench_error, bench_qr, bench_scaling, bench_sketch,
                    bench_total, bench_tsolve, roofline)
 
@@ -37,17 +42,13 @@ def main():
     bench_total.main(flags)
     section("Table 2: sketch / FFT phase by backend")
     bench_sketch.main(flags)
-    section("Table 3: Gram-Schmidt phase")
-    bench_qr.main(flags)
+    section("Table 3: Gram-Schmidt phase + fused panel-step sweep")
+    bench_qr.main(flags + js)
     section("Table 4: factorization of R")
     bench_tsolve.main(flags)
     section("Table 5: ||A - BP||_2 + eq.(3) bound")
     bench_error.main(flags)
     if not args.skip_scaling:
-        import os
-        if args.bench_json and os.path.exists(args.bench_json):
-            os.remove(args.bench_json)     # fresh record per harness run
-        js = ["--json", args.bench_json] if args.bench_json else []
         section("Figures 1-2: structural parallel scaling")
         bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6",
                             *js])

@@ -35,12 +35,12 @@ def main():
                               sketch_kind="gaussian", qr_impl=qr_impl)
         return dec.B, dec.P
 
+    from .common import normalize_cost_analysis
+
     with mesh:
         lowered = jax.jit(run).lower(key, A)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, (list, tuple)):      # jax 0.4.x: one dict per program
-        cost = cost[0] if cost else {}
+    cost = normalize_cost_analysis(compiled)
     bytes_per_device = 0.0
     try:
         ma = compiled.memory_analysis()

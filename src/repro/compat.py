@@ -18,6 +18,9 @@ Exports:
                out_specs=..., check_vma=...)`` resolving to whichever
                implementation the installed jax provides, translating
                ``check_vma`` <-> ``check_rep``.
+  normalize_cost_analysis — ``compiled.cost_analysis()`` as ONE dict on
+               every jax version (0.4.x returns a list of per-program
+               dicts; >= 0.5 the dict directly; either may be None).
 """
 from __future__ import annotations
 
@@ -28,7 +31,18 @@ from typing import Any, Optional, Sequence
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["AxisType", "make_mesh", "shard_map"]
+__all__ = ["AxisType", "make_mesh", "shard_map", "normalize_cost_analysis"]
+
+
+def normalize_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to one dict (see module
+    docstring).  Everything lowering-based — benchmarks and
+    ``launch.dryrun`` — should read costs through here instead of
+    re-implementing the 0.4.x list quirk."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
+    return cost
 
 
 try:  # jax >= 0.5

@@ -14,15 +14,24 @@ mesh-level).  Phase costs by ``qr_impl``:
                 Fine while the sketch fits one device; it caps matrix size
                 at a single device's HBM.
     'panel_     NO replication (``core.qr_dist``): each device factors its
-    parallel'   own ``l x n_local`` shard in place.  Per PANEL of ``b``
-                pivots: one psum of the n residual norms (O(n) bytes) for
-                global pivot selection, one ``l x b`` psum gathering the
-                owners' candidate columns, replicated CholeskyQR2 on the
-                tiny panel (fused Gram+coefficients — ``kernels/
-                panel_gram``), then shard-local deflation.  Per device:
-                O(l n/ndev + l b) memory, O(l k n/ndev) flops, and
-                O(k/b * (n + l b)) communicated bytes total — the sketch
-                width now scales with the mesh, not one device.
+    parallel'   own ``l x n_local`` shard in place through the fused
+                panel-step kernel (``kernels/panel_step``).  Per PANEL of
+                ``b`` pivots:
+                  - one ``l x b`` psum gathering the owners' candidate
+                    columns (each global column lives on one shard);
+                  - stage A (one kernel sweep of the shard): in-kernel
+                    CholeskyQR2 of the replicated panel + coefficient
+                    block ``W`` + DOWNDATED residual norms;
+                  - one psum of the n downdated norms — panel p+1's
+                    pivot statistics, issued BEFORE the deflation and
+                    data-independent of it, so the all-reduce OVERLAPS
+                    the trailing GEMM (double-buffered collectives)
+                    instead of serializing behind it;
+                  - stage B: shard-local deflation ``Z -= Q_p W``.
+                Per device: O(l n/ndev + l b) memory, O(l k n/ndev)
+                flops, O(k/b * (n + l b)) communicated bytes total with
+                the O(n) term latency-hidden — sketch width scales with
+                the mesh, not one device.
   interp solve  : zero communication — each device solves ``R1 T = R2`` for
                   its own column block (paper: "column-wise in parallel").
 
@@ -40,7 +49,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .qr import _h as _conj_t, pivoted_qr
+from .qr import _h as _conj_t, pivoted_qr, resolve_panel
 from .qr_dist import gather_columns_psum, panel_parallel_qr_local
 from .sketch import sketch as _sketch
 from .tsolve import solve_upper_triangular_xla
@@ -128,7 +137,8 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
                             sharded over ``axis`` instead of replicated.
 
     ``qr_panel`` is the panel width for 'blocked' and 'panel_parallel'
-    (ignored by 'cgs2').
+    (ignored by 'cgs2'); an int, or 'auto' for the eq.(3)-aware width
+    heuristic (``core.qr.resolve_panel``).
     """
     l = 2 * k if l is None else l
     n = A.shape[1]
@@ -139,6 +149,7 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
     if qr_impl not in QR_IMPLS:
         raise ValueError(f"unknown qr impl {qr_impl!r}; expected one of "
                          f"{QR_IMPLS}")
+    qr_panel = resolve_panel(qr_panel, k, l)
     if qr_panel < 1:
         raise ValueError(f"need qr_panel >= 1, got {qr_panel}")
     ndev = mesh.shape[axis]

@@ -23,6 +23,24 @@ Beyond-paper options (DESIGN.md section 2):
   Same O(lkn) flops as CGS2, but MXU/GEMM-bound instead of VPU/GEMV-
   bound, and k/b trailing updates instead of k.
 
+The blocked engine's per-panel work runs, by default, as the single
+fused Pallas kernel ``kernels/panel_step`` (``panel_impl="fused"``): one
+VMEM residency of each residual slab produces the orthonormal panel
+(in-kernel CholeskyQR2), the coefficient block, the deflated slab, AND
+the next panel's residual norms — where the split path re-reads the
+residual from HBM for the Gram, again for the deflation, and a third
+time for the norm recompute at the next panel's top.  The split
+``panel_impl`` spellings ('auto' | 'chol' | 'house') remain as parity
+oracles and benchmark references.
+
+Panel width vs eq.(3) quality: wider panels mean fewer (GEMM-bound)
+trailing updates but rank the whole panel from ONE set of residual
+norms, so pivot quality drifts from the per-column oracle as k/panel
+grows.  At k ~ 100, ``panel=32`` can exceed the paper's eq.(3) error
+bound by ~2x while ``panel=16`` stays ~10x inside it; throughput favors
+32.  ``pivoted_qr(..., panel="auto")`` picks 16 when k is small relative
+to l (the bound-critical regime — paper-parity benches), 32 otherwise.
+
 Callers choose via ``pivoted_qr(Y, k, impl=...)`` with
 ``impl in {"cgs2", "blocked"}`` — ``cgs2`` is the paper-faithful parity
 oracle, ``blocked`` the fast path.  ``rid``/``rsvd``/``rid_distributed``
@@ -36,10 +54,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels.panel_step import panel_step
 from .types import QRResult
 
 __all__ = ["cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr",
-           "householder_qr", "cholesky_qr2"]
+           "householder_qr", "cholesky_qr2", "resolve_panel"]
 
 
 def _h(x: jax.Array) -> jax.Array:
@@ -262,7 +281,7 @@ def _panel_orthonormalize(Z: jax.Array, idx: jax.Array, Q_prev: jax.Array,
 
 @partial(jax.jit, static_argnames=("k", "panel", "panel_impl"))
 def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
-                       panel_impl: str = "auto") -> QRResult:
+                       panel_impl: str = "fused") -> QRResult:
     """Blocked-panel greedy-pivoted thin QR of the wide sketch ``Y`` (l x n).
 
     Per panel of ``b = panel`` pivots:
@@ -270,15 +289,29 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
       1. residual column norms of the deflated ``Z`` rank the candidates;
          the top-``b`` unpicked columns become this panel's pivots
          (``lax.top_k`` — the panel analogue of the paper's greedy argmax);
-      2. the panel is orthonormalized against the prior basis and itself
-         (``cholesky_qr2`` fast path, per-column CGS2 fallback — see
-         ``_panel_orthonormalize``);
+      2. the panel is orthonormalized against the prior basis and itself;
       3. the trailing residual deflates with ONE GEMM pair,
          ``Z -= Q_p (Q_p^H Z)``, replacing ``b`` rank-1 GEMV updates.
 
+    ``panel_impl`` selects how steps 2-3 run:
+
+      "fused" (default) — ONE Pallas kernel per panel
+          (``kernels/panel_step``): in-kernel CholeskyQR2 of the
+          candidates plus coefficient block, deflation, and the NEXT
+          panel's residual norms, all in a single VMEM residency of each
+          residual slab.  The norms are loop-carried, so the split
+          paths' per-panel norm recompute (one extra full read of ``Z``)
+          disappears.  Degenerate panels fall back to the adaptive
+          per-column selection exactly like "auto".
+      "auto" / "chol" / "house" — the split parity oracles: XLA-level
+          CholeskyQR2 / Householder panels with a separate GEMM-pair
+          deflation (see ``_panel_orthonormalize``).
+
     Pivot ORDER within a panel follows residual-norm rank at panel entry,
     so the pivot set may differ from ``cgs2_pivoted_qr``'s on near-ties —
-    the ID quality is the same (see tests/test_qr_blocked.py).
+    the ID quality is the same (see tests/test_qr_blocked.py).  Panel
+    width trades throughput against eq.(3) pivot quality (module
+    docstring); 32 is the production default, 16 the paper-parity choice.
 
     Returns ``QRResult(Q, R, piv)`` with ``R = Q^H Y``; ``R[:, piv]`` is
     upper triangular up to orthogonalization error, exactly like the
@@ -289,7 +322,7 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
         raise ValueError(f"need 0 < k <= min(l, n); got k={k}, Y of shape {Y.shape}")
     if panel < 1:
         raise ValueError(f"need panel >= 1, got {panel}")
-    if panel_impl not in ("auto", "chol", "house"):
+    if panel_impl not in ("fused", "auto", "chol", "house"):
         raise ValueError(f"unknown panel_impl {panel_impl!r}")
     dtype = Y.dtype
     rdtype = jnp.finfo(dtype).dtype
@@ -299,6 +332,38 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
     picked = jnp.zeros((n,), bool)
     Z = Y
     off = 0
+    if panel_impl == "fused":
+        res2 = _masked_res2(Z, picked, rdtype)  # the ONLY full norm pass
+        while off < k:                          # static unroll: k/b panels
+            b = min(panel, k - off)
+            _, idx = lax.top_k(res2, b)
+            idx = idx.astype(jnp.int32)
+            C = jnp.take(Z, idx, axis=1)
+            if off:                             # block re-projection ("2"
+                C = C - Q[:, :off] @ (_h(Q[:, :off]) @ C)  # of CGS2)
+            # one VMEM pass over Z; W elided (R is recomputed at the end)
+            Qp, O, _, r2 = panel_step(C, Z, emit_w=False)
+            err = jnp.max(jnp.abs(_h(Qp) @ Qp - jnp.eye(b, dtype=dtype)))
+            ok = jnp.all(jnp.isfinite(Qp)) & \
+                (err < jnp.sqrt(jnp.finfo(rdtype).eps))
+
+            def _fallback(Z=Z, Qprev=Q[:, :off], picked=picked, b=b):
+                Qf, idxf = _panel_select_cgs2(Z, Qprev, picked, b)
+                Of = Z - Qf @ (_h(Qf) @ Z)
+                r2f = jnp.sum(jnp.abs(Of) ** 2, axis=0).astype(rdtype)
+                return Qf, idxf, Of, r2f
+
+            Qp, idx, Z, r2 = lax.cond(
+                ok, lambda Qp=Qp, idx=idx, O=O, r2=r2: (Qp, idx, O, r2),
+                _fallback)
+            picked = picked.at[idx].set(True)
+            res2 = jnp.where(picked, jnp.asarray(-1.0, rdtype),
+                             r2.astype(rdtype))
+            Q = Q.at[:, off:off + b].set(Qp)
+            piv = piv.at[off:off + b].set(idx)
+            off += b
+        R = _h(Q) @ Y
+        return QRResult(Q=Q, R=R, piv=piv)
     while off < k:                              # static unroll: k/b panels
         b = min(panel, k - off)
         res2 = _masked_res2(Z, picked, rdtype)
@@ -314,8 +379,22 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
     return QRResult(Q=Q, R=R, piv=piv)
 
 
+def resolve_panel(panel, k: int, l: int) -> int:
+    """Resolve ``panel="auto"`` to a width: 16 when ``k`` is small
+    relative to ``l`` (2k <= l — the regime where the paper's eq.(3)
+    bound must hold and narrow panels keep pivot quality within it),
+    32 otherwise (throughput: fewer trailing updates).  Integers pass
+    through unchanged; any other string is rejected eagerly (not deep
+    inside a jitted comparison)."""
+    if isinstance(panel, str):
+        if panel == "auto":
+            return 16 if 2 * k <= l else 32
+        raise ValueError(f"unknown panel {panel!r}; expected an int or 'auto'")
+    return panel
+
+
 def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
-               panel: int = 32, panel_impl: str = "auto") -> QRResult:
+               panel=32, panel_impl: str = "fused") -> QRResult:
     """Dispatch the pivoted QR of the sketch.
 
     ``impl="cgs2"``    — the paper's per-column iterated Gram-Schmidt
@@ -323,8 +402,13 @@ def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
     ``impl="blocked"`` — the blocked-panel engine above (O(k/panel)
                          sequential GEMM steps; the production default,
                          ~MXU-bound).  ``panel_impl`` picks its panel
-                         factorization ('auto' | 'chol' | 'house' — see
+                         step ('fused' — the one-kernel default — or the
+                         split 'auto' | 'chol' | 'house' oracles; see
                          ``blocked_pivoted_qr``); ignored by cgs2.
+
+    ``panel`` may be an int or ``"auto"`` (``resolve_panel``): narrow
+    16-column panels when k is small relative to l so the paper's eq.(3)
+    error bound holds, 32 otherwise.
 
     (The distributed-only 'panel_parallel' engine lives in
     ``core.qr_dist`` — it needs a mesh axis, not a replicated ``Y``.)
@@ -332,5 +416,6 @@ def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
     if impl == "cgs2":
         return cgs2_pivoted_qr(Y, k)
     if impl == "blocked":
-        return blocked_pivoted_qr(Y, k, panel=panel, panel_impl=panel_impl)
+        return blocked_pivoted_qr(Y, k, panel=resolve_panel(panel, k, Y.shape[0]),
+                                  panel_impl=panel_impl)
     raise ValueError(f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")

@@ -15,18 +15,45 @@ communication-avoiding shape of parallel rank-revealing factorizations
   * the owning devices contribute their candidate columns via a b-sized
     ``psum`` gather (``l x panel`` — each global column lives on exactly
     one shard, so the sum IS the gather);
-  * panels are orthonormalized with CholeskyQR2 expressed through ONE
-    fused Gram pass: ``kernels/panel_gram`` computes ``G = C^H C`` and the
-    trailing coefficient block ``V = C^H Z_local`` in a single VMEM sweep
-    over the shard, and the b x b triangular solves turn (G, V) into
-    ``Q_p`` and ``W = Q_p^H Z_local`` without re-reading ``Z_local``;
-  * each device deflates its own shard, ``Z_loc -= Q_p W``.
+  * the panel step runs through ``kernels/panel_step``
+    (``panel_impl="fused"``, the default): stage A factors the
+    replicated candidate panel with in-kernel CholeskyQR2 and emits the
+    coefficient block ``W = Q_p^H Z_loc`` PLUS the downdated residual
+    norms (``res2 - colnorms^2(W)``, exact for an orthonormal panel) in
+    one sweep of the shard; stage B applies the deflation
+    ``Z_loc -= Q_p W``.
+  * DOUBLE-BUFFERED COLLECTIVES: because stage A already yields the next
+    panel's pivot statistics, the n-length norm psum for panel p+1 is
+    issued BEFORE stage B of panel p — the all-reduce has no data
+    dependence on the deflation GEMM, so XLA's scheduler overlays the
+    collective with the largest per-panel compute instead of serializing
+    behind it (the latency-hiding shape of Heavner et al.'s parallel
+    UTV).  tests/test_qr_dist.py asserts the independence structurally
+    on the lowering.
+
+``panel_impl="gram"`` keeps the PR-2 split path (``kernels/panel_gram``
++ b x b triangular solves + XLA deflation, norms recomputed from the
+deflated shard) as the in-place parity oracle; its psum chain is fully
+serialized, which is exactly what the fused path's overlap removes.
+
+Downdate vs recompute: the fused path's pivot norms are DOWNDATED
+(GEQP3-style, like the cgs2 oracle's per-column loop) rather than
+recomputed from the deflated shard — that is what frees the psum from
+the deflation.  The clamped downdate is exact for an orthonormal panel
+up to rounding, but the rounding compounds over k/panel panels, so on
+fast-decaying spectra in f32 the tail panels' statistics can drown in
+accumulated cancellation noise and pivot quality degrades relative to
+the recomputing 'gram' oracle (late junk pivots cannot be detected by
+the Q_p orthogonality check).  For bound-critical f32 runs at large
+k/panel, prefer ``panel_impl="gram"`` or f64; the parity tests bound
+the drift on the shapes we ship.
 
 Per-device storage is ``O(l * n/ndev + l * panel)`` and per-panel
 communication is ``O(n + l * panel)`` bytes — versus the replicated
-engine's one-shot ``O(l * n)`` all-gather.  That makes sketch width (and
-hence matrix size) scale with the mesh instead of with a single device's
-memory — the paper's 64 GB / 128-processor regime.
+engine's one-shot ``O(l * n)`` all-gather — with the ``O(n)`` half of
+that hidden behind the deflation on the fused path.  That makes sketch
+width (and hence matrix size) scale with the mesh instead of with a
+single device's memory — the paper's 64 GB / 128-processor regime.
 
 ``panel_parallel_qr_local`` is the per-device body (composable inside an
 existing ``shard_map``, e.g. ``rid_distributed``);
@@ -43,6 +70,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
 from ..kernels.panel_gram import panel_gram
+from ..kernels.panel_step import panel_apply, panel_coeff
 from .qr import _h, householder_qr
 from .types import QRResult
 
@@ -66,20 +94,32 @@ def gather_columns_psum(Z_loc: jax.Array, idx: jax.Array, axis: str
     return lax.psum(contrib, axis)
 
 
+def _scatter_res2_psum(res2_loc: jax.Array, n: int, axis: str) -> jax.Array:
+    """Assemble the replicated length-``n`` pivot statistics from each
+    device's length-``n_loc`` masked local norms: scatter into the
+    device's slot of a zero vector, one ``psum``.  On the fused path
+    this psum is issued from downdated norms BEFORE the deflation runs —
+    the double-buffered collective the module docstring describes."""
+    n_loc = res2_loc.shape[0]
+    off = lax.axis_index(axis).astype(jnp.int32) * n_loc
+    contrib = lax.dynamic_update_slice(jnp.zeros((n,), res2_loc.dtype),
+                                       res2_loc, (off,))
+    return lax.psum(contrib, axis)
+
+
+def _masked_local_res2(Z_loc: jax.Array, picked: jax.Array) -> jax.Array:
+    """Local residual norms^2 with picked columns at the -1 sentinel."""
+    rdtype = jnp.finfo(Z_loc.dtype).dtype
+    res2_loc = jnp.sum(jnp.abs(Z_loc) ** 2, axis=0).astype(rdtype)
+    return jnp.where(picked, jnp.asarray(-1.0, rdtype), res2_loc)
+
+
 def _global_res2(Z_loc: jax.Array, picked: jax.Array, n: int, axis: str
                  ) -> jax.Array:
-    """Replicated length-``n`` residual norms^2: each device scatters its
-    shard's masked norms into its slot of a zero vector and one ``psum``
-    assembles the global statistics (picked columns carry the -1 sentinel
-    from their owner; everyone else contributes 0 there)."""
-    rdtype = jnp.finfo(Z_loc.dtype).dtype
-    n_loc = Z_loc.shape[1]
-    off = lax.axis_index(axis).astype(jnp.int32) * n_loc
-    res2_loc = jnp.sum(jnp.abs(Z_loc) ** 2, axis=0).astype(rdtype)
-    res2_loc = jnp.where(picked, jnp.asarray(-1.0, rdtype), res2_loc)
-    contrib = lax.dynamic_update_slice(jnp.zeros((n,), rdtype), res2_loc,
-                                       (off,))
-    return lax.psum(contrib, axis)
+    """Replicated length-``n`` residual norms^2, recomputed from the
+    deflated shard (the 'gram' oracle path; picked columns carry the -1
+    sentinel from their owner, everyone else contributes 0 there)."""
+    return _scatter_res2_psum(_masked_local_res2(Z_loc, picked), n, axis)
 
 
 def _panel_qp_w(C: jax.Array, Z_loc: jax.Array
@@ -104,17 +144,29 @@ def _panel_qp_w(C: jax.Array, Z_loc: jax.Array
 
 
 def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
-                            ndev: int, panel: int = 32
+                            ndev: int, panel: int = 32,
+                            panel_impl: str = "fused"
                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-device body of the panel-parallel pivoted QR; call INSIDE a
     ``shard_map`` over ``axis`` with ``Y_loc`` the device's ``l x n/ndev``
     column shard of the sketch.
+
+    ``panel_impl="fused"`` (default) runs the panel step through
+    ``kernels/panel_step`` with double-buffered collectives: stage A
+    (factor + coefficients + downdated norms) feeds panel p+1's pivot
+    psum BEFORE stage B (the shard deflation) runs, so the all-reduce
+    overlaps the GEMM.  ``panel_impl="gram"`` keeps the PR-2 split path
+    (``panel_gram`` + solves + XLA deflation, norms recomputed from the
+    deflated shard) as the serialized parity oracle.
 
     Returns ``(Q, piv, R_loc)``: ``Q`` (l x k) and the global pivot
     indices ``piv`` (k,) are bitwise identical on every device (all inputs
     to their computation arrive through collectives), ``R_loc = Q^H Y_loc``
     (k x n_loc) stays sharded.
     """
+    if panel_impl not in ("fused", "gram"):
+        raise ValueError(f"unknown panel_impl {panel_impl!r}; "
+                         f"expected 'fused' or 'gram'")
     l, n_loc = Y_loc.shape
     n = n_loc * ndev
     dtype = Y_loc.dtype
@@ -126,6 +178,55 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
     off = lax.axis_index(axis).astype(jnp.int32) * n_loc
     Z = Y_loc
     pos = 0
+    if panel_impl == "fused":
+        # Prologue psum: panel 0's statistics from the undeflated shard.
+        res2_loc = _masked_local_res2(Z, picked)
+        res2_g = _scatter_res2_psum(res2_loc, n, axis)
+        while pos < k:                         # static unroll: k/panel panels
+            b = min(panel, k - pos)
+            # 1. pivots from the psum issued LAST panel (double buffer).
+            _, idx = lax.top_k(res2_g, b)
+            idx = idx.astype(jnp.int32)
+            # 2. candidate gather: l x b psum, owners contribute columns.
+            C = gather_columns_psum(Z, idx, axis)
+            if pos:
+                C = C - Q[:, :pos] @ (_h(Q[:, :pos]) @ C)
+            # 3. stage A: in-kernel CholeskyQR2 of the replicated panel +
+            #    coefficient block + downdated norms, one shard sweep.
+            #    (Replicated C in -> bitwise-identical Q_p on every device.)
+            Qp, W, r2d = panel_coeff(C, Z, res2_loc)
+            # Rank-deficient panels (noise-floor candidates) break the
+            # in-kernel cholesky into junk factors; fall back to Householder
+            # on the replicated panel, which completes junk directions
+            # orthonormally.  Generic sketches never take this branch.
+            err = jnp.max(jnp.abs(_h(Qp) @ Qp - jnp.eye(b, dtype=dtype)))
+            ok = jnp.all(jnp.isfinite(Qp)) & \
+                (err < jnp.sqrt(jnp.finfo(rdtype).eps))
+
+            def _fallback(C=C, Z=Z, res2_loc=res2_loc):
+                Qf = householder_qr(C)[0]
+                Wf = _h(Qf) @ Z
+                dd = jnp.sum(jnp.abs(Wf) ** 2, axis=0).astype(rdtype)
+                return Qf, Wf, jnp.maximum(res2_loc - dd,
+                                           jnp.zeros((), rdtype))
+
+            Qp, W, r2d = lax.cond(
+                ok, lambda Qp=Qp, W=W, r2d=r2d: (Qp, W, r2d), _fallback)
+            # 4. bookkeeping, then ISSUE panel p+1's pivot psum — its
+            #    inputs are (W, picked), NOT the deflated shard, so the
+            #    collective is independent of stage B below and overlaps it.
+            loc = idx - off
+            picked = picked.at[jnp.clip(loc, 0, n_loc - 1)].max(
+                (loc >= 0) & (loc < n_loc))
+            res2_loc = jnp.where(picked, jnp.asarray(-1.0, rdtype), r2d)
+            res2_g = _scatter_res2_psum(res2_loc, n, axis)
+            # 5. stage B: deflate OWN shard — the GEMM the psum hides behind.
+            Z = panel_apply(Qp, W, Z)
+            Q = Q.at[:, pos:pos + b].set(Qp)
+            piv = piv.at[pos:pos + b].set(idx)
+            pos += b
+        R_loc = _h(Q) @ Y_loc                  # exact recompute, oracle contract
+        return Q, piv, R_loc
     while pos < k:                             # static unroll: k/panel panels
         b = min(panel, k - pos)
         # 1. global pivot selection from psum-reduced norms (n floats).
@@ -164,24 +265,31 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
 
 
 def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
-                              axis: str = "data", panel: int = 32) -> QRResult:
+                              axis: str = "data", panel: int = 32,
+                              panel_impl: str = "fused") -> QRResult:
     """Standalone sharded entry point: pivoted thin QR of a column-sharded
     wide sketch ``Y`` (l x n) without ever materializing ``l x n`` on one
-    device.  Returns ``QRResult(Q, R, piv)`` with ``Q``/``piv`` replicated
-    and ``R`` column-sharded over ``axis`` — the same contract as
-    ``core.qr.pivoted_qr`` up to panel-granularity pivot order.
+    device.  ``panel_impl`` picks the per-panel engine ('fused' — the
+    double-buffered kernel default — or 'gram', the PR-2 split oracle;
+    see ``panel_parallel_qr_local``).  Returns ``QRResult(Q, R, piv)``
+    with ``Q``/``piv`` replicated and ``R`` column-sharded over ``axis``
+    — the same contract as ``core.qr.pivoted_qr`` up to panel-granularity
+    pivot order.
     """
     l, n = Y.shape
     if not (0 < k <= min(l, n)):
         raise ValueError(f"need 0 < k <= min(l, n); got k={k}, l={l}, n={n}")
     if panel < 1:
         raise ValueError(f"need panel >= 1, got {panel}")
+    if panel_impl not in ("fused", "gram"):
+        raise ValueError(f"unknown panel_impl {panel_impl!r}; "
+                         f"expected 'fused' or 'gram'")
     ndev = mesh.shape[axis]
     if n % ndev:
         raise ValueError(f"n={n} must divide the '{axis}' axis ({ndev} devices)")
 
     fn = partial(panel_parallel_qr_local, k=k, axis=axis, ndev=ndev,
-                 panel=panel)
+                 panel=panel, panel_impl=panel_impl)
     mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(None, axis),),

@@ -65,6 +65,9 @@ def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
       qr_impl: 'blocked' (panel GEMM engine, the production default) |
         'cgs2' (the paper-faithful parity oracle).
       qr_panel: panel width for the blocked engine (ignored by cgs2).
+        An int, or 'auto' to pick 16 when k is small relative to l (the
+        eq.(3)-bound-critical regime) and 32 otherwise — see
+        ``core.qr.resolve_panel``.
     """
     l = 2 * k if l is None else l
     if l < k:

@@ -7,6 +7,12 @@
                   the blocked pivoted QR
   panel_gram    — fused panel Gram + coefficient pass (C^H C, C^H Z_loc)
                   for the panel-parallel distributed QRCP (core.qr_dist)
+  panel_step    — the whole panel step in ONE kernel: in-kernel
+                  CholeskyQR2 of the candidate panel + coefficient block
+                  + deflated slab + updated residual norms in a single
+                  VMEM residency (panel_impl="fused"), plus the
+                  coeff/apply split pair the distributed engine uses to
+                  overlap the pivot-norm psum with the deflation
   tsolve        — column-parallel blocked triangular solve (paper eq. 10)
   flash         — FlashAttention with causal block skipping (the LM
                   stack's hot-spot; beyond-paper)
@@ -17,9 +23,11 @@ Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
 from .cgs.ops import panel_deflate, project_out
 from .flash.ops import flash_attention
 from .panel_gram.ops import panel_gram
+from .panel_step.ops import panel_apply, panel_coeff, panel_step
 from .sketch_matmul.ops import sketch_matmul
 from .srht.ops import fwht as fwht_pallas, srht as srht_pallas
 from .tsolve.ops import tsolve
 
-__all__ = ["project_out", "panel_deflate", "panel_gram", "flash_attention",
+__all__ = ["project_out", "panel_deflate", "panel_gram", "panel_step",
+           "panel_coeff", "panel_apply", "flash_attention",
            "sketch_matmul", "fwht_pallas", "srht_pallas", "tsolve"]

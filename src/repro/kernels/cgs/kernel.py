@@ -14,13 +14,13 @@ an intermediate of different shape).
 The kernel is used by the blocked CGS2 panel QR (benchmarks/bench_qr.py)
 and by the re-orthogonalization passes of the gradient compressor.
 
-``panel_deflate_kernel`` below is its panel-QR sibling, designed as the
-on-device trailing update of ``core.qr.blocked_pivoted_qr`` (which today
-deflates with plain jnp GEMMs — fusing it in is a ROADMAP open item):
-same fused GEMM pair, but the basis is one narrow PANEL ``Q_p`` (l x b,
-b ~ 32) and the coefficient block ``W = Q_p^H Z`` is emitted as a second
-output, since the fused engine will need it for the panel's rows of
-``R`` without re-reading ``Z`` from HBM.
+``panel_deflate_kernel`` below is its panel-QR sibling: the same fused
+GEMM pair, but the basis is one narrow PANEL ``Q_p`` (l x b, b ~ 32)
+and the coefficient block ``W = Q_p^H Z`` is emitted as a second
+output.  It is now one HALF of the fully fused panel step —
+``kernels/panel_step`` subsumes it (plus the panel factorization and
+the norm update) for the production ``panel_impl="fused"`` path; this
+kernel stays as the split parity oracle and benchmark reference.
 """
 from __future__ import annotations
 

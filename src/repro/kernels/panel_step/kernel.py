@@ -1,0 +1,255 @@
+"""Fused panel-step kernel for the blocked pivoted QR hot loop.
+
+One ``pallas_call`` per panel subsumes what PR 1/2 ran as three separate
+HBM round trips (candidate gather -> ``panel_gram`` -> ``cgs/
+panel_deflate`` -> next panel's norm recompute): with the candidate panel
+``C`` (l x b) resident in VMEM, grid step 0 factors it with CholeskyQR2
+*in kernel* and every step then consumes one residual slab to emit
+
+  Q_p   = C (L2 L1)^{-H}      (l x b)   the orthonormal panel
+  W     = Q_p^H Z             (b x n)   the coefficient block
+  O     = Z - Q_p W           (l x n)   the deflated trailing slab
+  res2  = colnorms^2(O)       (1 x n)   next panel's pivot statistics
+
+in ONE VMEM residency of each ``Z`` slab.  The b x b factor cannot call
+``jnp.linalg`` inside a TPU kernel, so Cholesky and the right triangular
+solves are written as masked rank-1 loops (``_chol_masked`` /
+``_solve_right_lt``) — O(b) ``fori_loop`` steps of VPU/MXU-shaped work,
+O(l b^2) flops total, noise next to the O(l b n) slab sweep.  ``Q_p`` is
+written to an output block with a CONSTANT index map, so the step-0
+factor stays in VMEM and is re-read by every later slab step (the same
+revisiting contract ``panel_gram`` uses for its Gram output).
+
+Two split siblings serve the distributed engine (``core.qr_dist``),
+where the psum of the downdated pivot norms must be ISSUABLE before the
+trailing deflation so the collective overlaps the GEMM
+(double-buffered collectives — see the module docstring there):
+
+  ``panel_coeff_kernel``  — factor + ``W`` + downdated norms
+                            (``res2_in - colnorms^2(W)``, exact for an
+                            orthonormal panel by Pythagoras), NO ``O``;
+  ``panel_apply_kernel``  — ``O = Z - Q_p W`` with ``W`` given, the
+                            deflation pass the psum hides behind.
+
+Degenerate (rank-deficient) panels: ``_chol_masked`` clamps the pivot at
+the dtype's tiny before the sqrt, so the kernel never emits NaN from a
+negative pivot — it emits a wildly non-orthonormal ``Q_p`` instead,
+which the callers' ``||Q_p^H Q_p - I||`` check routes to their
+per-column / Householder fallbacks (core.qr / core.qr_dist).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..common import acc_dtype_for, cdiv
+
+
+def _chol_masked(G: jax.Array) -> jax.Array:
+    """Lower Cholesky of the b x b Gram ``G`` via ``b`` masked rank-1
+    steps (right-looking), using only VPU-shaped ops that lower in a TPU
+    kernel.  Non-positive pivots clamp to the dtype's tiny instead of
+    producing NaN (callers detect the resulting junk factor)."""
+    b = G.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    tiny = jnp.finfo(G.dtype).tiny
+
+    def body(j, A):
+        colj = jnp.sum(jnp.where(cols == j, A, 0.0), axis=1, keepdims=True)
+        diag = jnp.sum(jnp.where((rows == j) & (cols == j), A, 0.0))
+        lj = jnp.where(rows[:, :1] >= j,
+                       colj / jnp.sqrt(jnp.maximum(diag, tiny)), 0.0)
+        A = A - jnp.where(cols > j, lj * jnp.transpose(lj), 0.0)
+        return jnp.where(cols == j, lj, A)
+
+    L = lax.fori_loop(0, b, body, G)
+    return jnp.where(rows >= cols, L, 0.0)
+
+
+def _solve_right_lt(C: jax.Array, L: jax.Array) -> jax.Array:
+    """``X = C @ L^{-T}`` for lower-triangular ``L`` (b x b) and tall
+    ``C`` (l x b): forward substitution over columns, each step one
+    masked (l x b) matvec — MXU-shaped, kernel-lowerable."""
+    l, b = C.shape
+    rows = lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    colsb = lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    colsl = lax.broadcasted_iota(jnp.int32, (l, b), 1)
+
+    def body(j, X):
+        lrow = jnp.sum(jnp.where(rows == j, L, 0.0), axis=0, keepdims=True)
+        coeff = jnp.where(colsb < j, lrow, 0.0)              # L[j, i<j]
+        s = jnp.dot(X, jnp.transpose(coeff),
+                    preferred_element_type=C.dtype)          # (l, 1)
+        diag = jnp.sum(jnp.where(colsb == j, lrow, 0.0))
+        cj = jnp.sum(jnp.where(colsl == j, C, 0.0), axis=1, keepdims=True)
+        return jnp.where(colsl == j, (cj - s) / diag, X)
+
+    return lax.fori_loop(0, b, body, jnp.zeros_like(C))
+
+
+def _factor_cholqr2(c: jax.Array, acc) -> jax.Array:
+    """In-kernel CholeskyQR2 of the candidate panel ``c`` (l x b): two
+    Gram->Cholesky->solve rounds, the second from the COMPUTED ``Q1``
+    (Yamamoto correction), all in the accumulator dtype."""
+    ca = c.astype(acc)
+    L1 = _chol_masked(jnp.dot(ca.T, ca, preferred_element_type=acc))
+    Q1 = _solve_right_lt(ca, L1)
+    L2 = _chol_masked(jnp.dot(Q1.T, Q1, preferred_element_type=acc))
+    return _solve_right_lt(Q1, L2)
+
+
+def _panel_step_compute(c_ref, z_ref, qp_ref):
+    """Shared per-slab body: factor on step 0 (persists via the constant
+    index map), then the slab's coefficient block and deflation."""
+    acc = acc_dtype_for(z_ref.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _factor():                        # once; persists via constant map
+        qp_ref[...] = _factor_cholqr2(c_ref[...], acc).astype(c_ref.dtype)
+
+    qp = qp_ref[...]                      # (l, b)
+    z = z_ref[...]                        # (l, bn)
+    w = jnp.dot(qp.T, z, preferred_element_type=acc)            # (b, bn)
+    o = z.astype(acc) - jnp.dot(qp, w.astype(qp.dtype),
+                                preferred_element_type=acc)     # (l, bn)
+    return z, w, o
+
+
+def _panel_step_body(c_ref, z_ref, qp_ref, o_ref, w_ref, r2_ref):
+    z, w, o = _panel_step_compute(c_ref, z_ref, qp_ref)
+    o_ref[...] = o.astype(z.dtype)
+    w_ref[...] = w.astype(z.dtype)
+    r2_ref[...] = jnp.sum(o * o, axis=0, keepdims=True).astype(z.dtype)
+
+
+def _panel_step_body_no_w(c_ref, z_ref, qp_ref, o_ref, r2_ref):
+    # W stays a VMEM intermediate: callers that recompute R = Q^H Y at
+    # the end (core.qr.blocked_pivoted_qr) never read it, so skipping
+    # its (b x n) HBM writeback saves one sketch-sized store per
+    # factorization.
+    z, _, o = _panel_step_compute(c_ref, z_ref, qp_ref)
+    o_ref[...] = o.astype(z.dtype)
+    r2_ref[...] = jnp.sum(o * o, axis=0, keepdims=True).astype(z.dtype)
+
+
+def panel_step_kernel(c: jax.Array, z: jax.Array, *, bn: int = 256,
+                      interpret: bool = True, emit_w: bool = True):
+    """Raw pallas_call for the fused panel step.  Pre-padded: bn | n.
+    Returns ``(Q_p, Z - Q_p W, W, colnorms^2(Z - Q_p W))``, with the
+    ``W`` slot ``None`` when ``emit_w=False`` (its HBM write elided)."""
+    l, b = c.shape
+    l2, n = z.shape
+    assert l == l2 and n % bn == 0, (c.shape, z.shape, bn)
+    out_specs = [
+        pl.BlockSpec((l, b), lambda j: (0, 0)),       # factored on step 0
+        pl.BlockSpec((l, bn), lambda j: (0, j)),
+        pl.BlockSpec((b, bn), lambda j: (0, j)),
+        pl.BlockSpec((1, bn), lambda j: (0, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((l, b), z.dtype),
+        jax.ShapeDtypeStruct((l, n), z.dtype),
+        jax.ShapeDtypeStruct((b, n), z.dtype),
+        jax.ShapeDtypeStruct((1, n), z.dtype),
+    ]
+    if not emit_w:
+        del out_specs[2], out_shape[2]
+    out = pl.pallas_call(
+        _panel_step_body if emit_w else _panel_step_body_no_w,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((l, b), lambda j: (0, 0)),   # panel, VMEM-resident
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(c, z)
+    if emit_w:
+        return out
+    qp, o, r2 = out
+    return qp, o, None, r2
+
+
+def _panel_coeff_body(c_ref, z_ref, r2in_ref, qp_ref, w_ref, r2_ref):
+    acc = acc_dtype_for(z_ref.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _factor():
+        qp_ref[...] = _factor_cholqr2(c_ref[...], acc).astype(c_ref.dtype)
+
+    qp = qp_ref[...]
+    z = z_ref[...]
+    w = jnp.dot(qp.T, z, preferred_element_type=acc)            # (b, bn)
+    w_ref[...] = w.astype(z.dtype)
+    dd = jnp.sum(w * w, axis=0, keepdims=True)                  # Pythagoras
+    r2_ref[...] = jnp.maximum(r2in_ref[...].astype(acc) - dd,
+                              0.0).astype(z.dtype)
+
+
+def panel_coeff_kernel(c: jax.Array, z: jax.Array, r2: jax.Array, *,
+                       bn: int = 256, interpret: bool = True
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw pallas_call for the factor+coefficient half (distributed stage
+    A).  Pre-padded: bn | n; ``r2`` is (1, n).  Returns
+    ``(Q_p, W, max(r2 - colnorms^2(W), 0))`` — everything the next
+    panel's pivot psum needs, WITHOUT the deflation the psum overlaps."""
+    l, b = c.shape
+    l2, n = z.shape
+    assert l == l2 and n % bn == 0 and r2.shape == (1, n), \
+        (c.shape, z.shape, r2.shape, bn)
+    return pl.pallas_call(
+        _panel_coeff_body,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((l, b), lambda j: (0, 0)),
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((l, b), lambda j: (0, 0)),
+            pl.BlockSpec((b, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, b), z.dtype),
+            jax.ShapeDtypeStruct((b, n), z.dtype),
+            jax.ShapeDtypeStruct((1, n), z.dtype),
+        ],
+        interpret=interpret,
+    )(c, z, r2)
+
+
+def _panel_apply_body(qp_ref, w_ref, z_ref, o_ref):
+    acc = acc_dtype_for(z_ref.dtype)
+    qp = qp_ref[...]                      # (l, b)
+    w = w_ref[...]                        # (b, bn)
+    z = z_ref[...]                        # (l, bn)
+    o = z.astype(acc) - jnp.dot(qp, w, preferred_element_type=acc)
+    o_ref[...] = o.astype(z.dtype)
+
+
+def panel_apply_kernel(qp: jax.Array, w: jax.Array, z: jax.Array, *,
+                       bn: int = 256, interpret: bool = True) -> jax.Array:
+    """Raw pallas_call for the deflation half (distributed stage B):
+    ``Z - Q_p W`` with ``W`` precomputed by ``panel_coeff_kernel`` — the
+    pass the next panel's norm psum runs concurrently with."""
+    l, b = qp.shape
+    l2, n = z.shape
+    assert l == l2 and w.shape == (b, n) and n % bn == 0, \
+        (qp.shape, w.shape, z.shape, bn)
+    return pl.pallas_call(
+        _panel_apply_body,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((l, b), lambda j: (0, 0)),
+            pl.BlockSpec((b, bn), lambda j: (0, j)),
+            pl.BlockSpec((l, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((l, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((l, n), z.dtype),
+        interpret=interpret,
+    )(qp, w, z)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the fused panel step (real AND complex dtypes).
+
+The math mirrors ``core.qr_dist._panel_qp_w``'s CholeskyQR2 with the
+Yamamoto correction (round 2 factors the COMPUTED ``Q1``), then fuses
+the coefficient block, deflation, and residual-norm outputs the kernel
+produces in one pass.  Rank-deficient panels surface as NaN through
+``jnp.linalg.cholesky`` — callers' orthogonality checks catch either
+failure mode (NaN here, junk factors from the kernel's clamped sqrt).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _h(x: jax.Array) -> jax.Array:
+    return x.conj().T if jnp.issubdtype(x.dtype, jnp.complexfloating) else x.T
+
+
+def _factor_cholqr2_ref(c: jax.Array) -> jax.Array:
+    solve = partial(jax.scipy.linalg.solve_triangular, lower=True)
+    L1 = jnp.linalg.cholesky(_h(c) @ c)
+    Q1 = _h(solve(L1, _h(c)))                       # C L1^{-H}
+    L2 = jnp.linalg.cholesky(_h(Q1) @ Q1)
+    return _h(solve(L2, _h(Q1)))                    # Q1 L2^{-H}
+
+
+def panel_step_ref(c: jax.Array, z: jax.Array
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """``(Q_p, Z - Q_p W, W, colnorms^2(Z - Q_p W))`` with
+    ``Q_p = cholqr2(c)`` and ``W = Q_p^H z`` — the fused panel step."""
+    rdtype = jnp.finfo(z.dtype).dtype
+    qp = _factor_cholqr2_ref(c)
+    w = _h(qp) @ z
+    o = z - qp @ w
+    res2 = jnp.sum(jnp.abs(o) ** 2, axis=0).astype(rdtype)
+    return qp, o, w, res2
+
+
+def panel_coeff_ref(c: jax.Array, z: jax.Array, res2: jax.Array
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``(Q_p, W, max(res2 - colnorms^2(W), 0))`` — the factor+coefficient
+    half whose norm downdate feeds the overlapped psum (stage A)."""
+    rdtype = jnp.finfo(z.dtype).dtype
+    qp = _factor_cholqr2_ref(c)
+    w = _h(qp) @ z
+    dd = jnp.sum(jnp.abs(w) ** 2, axis=0).astype(rdtype)
+    return qp, w, jnp.maximum(res2.astype(rdtype) - dd,
+                              jnp.zeros((), rdtype))
+
+
+def panel_apply_ref(qp: jax.Array, w: jax.Array, z: jax.Array) -> jax.Array:
+    """``Z - Q_p W`` with ``W`` precomputed (stage B)."""
+    return z - qp @ w

@@ -30,6 +30,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import normalize_cost_analysis
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, cell_applicable, input_specs
@@ -151,7 +152,7 @@ def lower_cell(cfg, shape_name: str, mesh, *, compress: bool = False,
 
 
 def analyze(compiled) -> dict:
-    cost = compiled.cost_analysis() or {}
+    cost = normalize_cost_analysis(compiled)
     mem = None
     try:
         ma = compiled.memory_analysis()

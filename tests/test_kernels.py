@@ -6,10 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (fwht_pallas, panel_deflate, panel_gram,
+from repro.kernels import (fwht_pallas, panel_apply, panel_coeff,
+                           panel_deflate, panel_gram, panel_step,
                            project_out, sketch_matmul, srht_pallas, tsolve)
 from repro.kernels.cgs.ref import panel_deflate_ref, project_out_ref
 from repro.kernels.panel_gram.ref import panel_gram_ref
+from repro.kernels.panel_step.ref import (panel_apply_ref, panel_coeff_ref,
+                                          panel_step_ref)
 from repro.kernels.srht.ref import fwht_ref, srht_ref
 from repro.kernels.sketch_matmul.ref import sketch_matmul_ref as matmul_ref
 from repro.kernels.tsolve.ref import tsolve_ref
@@ -127,6 +130,99 @@ def test_panel_gram_complex_fallback():
                                atol=1e-3)
     np.testing.assert_allclose(np.asarray(got_v), np.asarray(c.conj().T @ z),
                                atol=1e-3)
+
+
+# --------------------------------------------------------------- panel step
+
+# (l, b, n) incl. remainder panels (b=7, b=2) and non-bn-divisible n.
+PANEL_STEP_SHAPES = [(16, 4, 30), (64, 32, 200), (256, 32, 513),
+                     (48, 7, 129), (64, 2, 100)]
+PS_ATOL = {jnp.float32: 1e-3, jnp.float64: 1e-10,
+           jnp.complex64: 1e-3, jnp.complex128: 1e-10}
+
+
+def _randn(k, shape, dtype):
+    rdt = jnp.float64 if dtype in (jnp.float64, jnp.complex128) else jnp.float32
+    x = jax.random.normal(key(k), shape, rdt)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        x = x + 1j * jax.random.normal(key(k + 100), shape, rdt)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("l,b,n", PANEL_STEP_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64,
+                                   jnp.complex64, jnp.complex128])
+def test_panel_step_matches_ref(l, b, n, dtype):
+    """Fused panel step vs the pure-jnp oracle: orthonormal panel,
+    deflated slab, coefficient block, and residual norms all agree
+    (complex dtypes exercise the oracle fallback path end to end)."""
+    if dtype in (jnp.float64, jnp.complex128):
+        jax.config.update("jax_enable_x64", True)
+    try:
+        c = _randn(20, (l, b), dtype)
+        z = _randn(21, (l, n), dtype)
+        qp, o, w, r2 = panel_step(c, z)
+        qpr, orf, wr, r2r = panel_step_ref(c, z)
+        atol = PS_ATOL[dtype]
+        np.testing.assert_allclose(np.asarray(qp), np.asarray(qpr), atol=atol)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                                   atol=10 * atol)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(wr),
+                                   atol=10 * atol)
+        np.testing.assert_allclose(np.asarray(r2), np.asarray(r2r),
+                                   atol=100 * atol)
+        # the factor really is orthonormal and the slab really deflated
+        orth = float(jnp.max(jnp.abs(qp.conj().T @ qp
+                                     - jnp.eye(b, dtype=dtype))))
+        assert orth < atol, orth
+        assert float(jnp.max(jnp.abs(qp.conj().T @ o))) < 100 * atol
+        # emit_w=False (the blocked-engine spelling) elides W, same rest
+        qp2, o2, w2, r22 = panel_step(c, z, emit_w=False)
+        assert w2 is None
+        np.testing.assert_allclose(np.asarray(o2), np.asarray(o), atol=0)
+        np.testing.assert_allclose(np.asarray(r22), np.asarray(r2), atol=0)
+    finally:
+        if dtype in (jnp.float64, jnp.complex128):
+            jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("l,b,n", [(64, 32, 200), (48, 7, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.complex64])
+def test_panel_coeff_apply_compose(l, b, n, dtype):
+    """The split pair (stage A coeff+downdate, stage B apply) composes to
+    the same deflation as the fused kernel, and the downdated norms
+    match the recomputed norms of the deflated slab (Pythagoras for an
+    orthonormal panel)."""
+    c = _randn(22, (l, b), dtype)
+    z = _randn(23, (l, n), dtype)
+    res2 = jnp.sum(jnp.abs(z) ** 2, axis=0)
+    qp, w, r2d = panel_coeff(c, z, res2)
+    o = panel_apply(qp, w, z)
+    qpr, orf, wr, r2r = panel_step_ref(c, z)
+    atol = 10 * PS_ATOL[dtype]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=atol)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), atol=atol)
+    # downdate == recompute up to cancellation-scaled roundoff
+    np.testing.assert_allclose(np.asarray(r2d), np.asarray(r2r),
+                               atol=float(jnp.max(res2)) * 1e-3)
+    # ref oracles agree with the naive formulas
+    qc, wc, rc = panel_coeff_ref(c, z, res2)
+    np.testing.assert_allclose(np.asarray(panel_apply_ref(qc, wc, z)),
+                               np.asarray(z - qc @ wc), atol=0)
+
+
+def test_panel_step_rank_deficient_detectable():
+    """Rank-deficient candidates (duplicated columns) must surface as a
+    caller-detectable failure — junk/non-finite factor, large
+    ||Q^H Q - I|| — so the engines' per-column/Householder fallbacks
+    trigger; they must NOT silently return a plausible-looking panel."""
+    c10 = jax.random.normal(key(24), (64, 4), jnp.float32)
+    c = jnp.concatenate([c10, c10], axis=1)              # rank 4, b=8
+    z = jax.random.normal(key(25), (64, 100), jnp.float32)
+    qp, o, w, r2 = panel_step(c, z)
+    bad = (not bool(jnp.all(jnp.isfinite(qp)))) or \
+        float(jnp.max(jnp.abs(qp.T @ qp - jnp.eye(8)))) > 1e-3
+    assert bad, "degenerate panel produced a seemingly orthonormal factor"
 
 
 # ------------------------------------------------------------------- tsolve

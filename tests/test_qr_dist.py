@@ -158,6 +158,140 @@ print("OK")
     assert "OK" in r.stdout
 
 
+def test_fused_matches_gram_oracle_8dev(subproc):
+    """ISSUE-3 parity: the fused panel step (panel_impl='fused', the
+    default) against the PR-2 split 'gram' oracle on the same sharded
+    sketch, 8 fake devices, multi-panel (panel=4 on k=12), real AND
+    complex: identical pivot sets, oracle-grade factors both."""
+    r = subproc(PRELUDE + """
+key = jax.random.key(7)
+l, n, k = 48, 400, 12
+for cplx in (False, True):
+    Y = lowrank(key, l, n, k, cplx=cplx)
+    Ysh = shard_columns(Y, mesh, "data")
+    qr_f = panel_parallel_pivoted_qr(Ysh, k, mesh=mesh, axis="data",
+                                     panel=4, panel_impl="fused")
+    qr_g = panel_parallel_pivoted_qr(Ysh, k, mesh=mesh, axis="data",
+                                     panel=4, panel_impl="gram")
+    assert set(np.asarray(qr_f.piv).tolist()) == \\
+        set(np.asarray(qr_g.piv).tolist()), (cplx, qr_f.piv, qr_g.piv)
+    assert len(set(np.asarray(qr_f.piv).tolist())) == k
+    scale = float(jnp.linalg.norm(Y))
+    orc = cgs2_pivoted_qr(Y, k)
+    for tag, qr in (("fused", qr_f), ("gram", qr_g)):
+        assert orth_err(qr) < 1e-12, (cplx, tag, orth_err(qr))
+        assert recon_err(Y, qr) <= 10 * recon_err(Y, orc) + 1e-11 * scale
+print("OK")
+""")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_norm_psum_overlaps_deflation(subproc):
+    """The double-buffered-collectives acceptance check, on the lowering:
+
+    (1) dependency structure — in the traced program, the norm psum that
+        selects panel p+1's pivots must NOT consume the output of panel
+        p's deflation kernel (stage B ``panel_apply``): the collective is
+        issued from stage A's downdated norms, so the scheduler is free
+        to overlap it with the deflation GEMM.  It MUST still depend on
+        earlier panels' deflations (the checker's positive control), and
+        on the 'gram' oracle path the same psum DOES consume the
+        deflated shard (the serialization the fused path removes).
+    (2) the compiled HLO still contains zero l x n (or larger)
+        all-gathers — the overlap did not reintroduce replication."""
+    r = subproc(PRELUDE + """
+import re
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.qr_dist import panel_parallel_qr_local
+
+l, n, k, b = 48, 400, 21, 7                     # 3 panels
+def traced(panel_impl):
+    fn = partial(panel_parallel_qr_local, k=k, axis="data", ndev=8,
+                 panel=b, panel_impl=panel_impl)
+    return shard_map(fn, mesh=mesh, in_specs=(P(None, "data"),),
+                     out_specs=(P(), P(), P(None, "data")),
+                     check_vma=False)
+
+def body_eqns(jaxpr):
+    # the shard_map body's equations, in issue order
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):          # shard_map: ClosedJaxpr param
+                return v.jaxpr.eqns
+            if hasattr(v, "eqns"):
+                return v.eqns
+    raise AssertionError("no inner jaxpr found")
+
+def analyze(panel_impl):
+    eqns = body_eqns(jax.make_jaxpr(traced(panel_impl))(jnp.zeros((l, n))))
+    # transitive producer cone per equation (conservative: an eqn depends
+    # on every eqn that defines one of its free input vars)
+    producers, cones = {}, []
+    for i, e in enumerate(eqns):
+        cone = set()
+        for v in e.invars:
+            j = producers.get(id(v))
+            if j is not None:
+                cone |= {j} | cones[j]
+        cones.append(cone)
+        for v in e.outvars:
+            producers[id(v)] = i
+    norm_psums = [i for i, e in enumerate(eqns)
+                  if "psum" in e.primitive.name
+                  and e.outvars[0].aval.shape == (n,)]
+    def is_deflate(e):
+        if panel_impl == "fused":
+            # stage B: the jitted panel_apply kernel call (a pjit eqn
+            # wrapping the pallas_call) or, if inlined, the raw kernel
+            return ("panel_apply" in str(e.params.get("name", "")) or
+                    (e.primitive.name == "pallas_call" and "apply" in
+                     str(e.params.get("name_and_src_info", ""))))
+        # gram path deflates with a plain XLA subtract of the shard shape
+        return e.primitive.name == "sub" and \\
+            e.outvars[0].aval.shape == (l, n // 8)
+    deflations = [i for i, e in enumerate(eqns) if is_deflate(e)]
+    assert len(norm_psums) >= 3 and len(deflations) == 3, \\
+        (panel_impl, norm_psums, deflations)
+    return norm_psums, deflations, cones
+
+# fused: psum issued during iteration p (selects p+1) is independent of
+# iteration p's deflation, but does see iteration p-1's.
+ps, dfl, cones = analyze("fused")
+for p in range(3):
+    psum_i = ps[p + 1]                    # ps[0] is the prologue psum
+    assert dfl[p] not in cones[psum_i], (p, ps, dfl)
+assert dfl[0] in cones[ps[2]], "positive control: stage A of panel 1 " \\
+    "reads the shard deflated by panel 0"
+
+# gram oracle: the same psum DOES wait on the deflation (positive
+# control that the checker detects serialization when it exists).
+ps_g, dfl_g, cones_g = analyze("gram")
+assert dfl_g[0] in cones_g[ps_g[1]], (ps_g, dfl_g)
+
+# (2) compiled HLO of the full distributed RID keeps zero l x n gathers
+from jax.sharding import NamedSharding
+m = 256
+A = jax.ShapeDtypeStruct((m, n), jnp.float64,
+                         sharding=NamedSharding(mesh, P(None, "data")))
+def run(key, A):
+    dec = rid_distributed(key, A, k, mesh=mesh, axis="data",
+                          sketch_kind="gaussian", qr_impl="panel_parallel",
+                          qr_panel=b)
+    return dec.B, dec.P
+txt = jax.jit(run).lower(jax.random.key(5), A).compile().as_text()
+AG = re.compile(r"f\\d+\\[(\\d+),(\\d+)\\][^\\n]*all-gather")
+big = [(int(a), int(c)) for a, c in AG.findall(txt)
+       if int(a) * int(c) >= (2 * k) * n]
+assert not big, f"fused panel-parallel path materializes l x n: {big}"
+print("OK")
+""")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
 # ------------------------------------------------- validation (in-process)
 
 def _one_dev_mesh():

@@ -48,6 +48,8 @@ def main():
     bench_tsolve.main(flags)
     section("Table 5: ||A - BP||_2 + eq.(3) bound")
     bench_error.main(flags)
+    section("eq.(3) verification grid (known spectra) + width calibration")
+    bench_error.main(flags + ["--grid", *js])
     if not args.skip_scaling:
         section("Figures 1-2: structural parallel scaling")
         bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6",

@@ -9,7 +9,11 @@ Public API:
                                panel_impl="fused" runs each panel as ONE
                                Pallas kernel — kernels/panel_step)
   pivoted_qr                 — qr_impl dispatcher ('blocked' | 'cgs2')
-  resolve_panel              — qr_panel="auto" width heuristic (eq.(3)-aware)
+  resolve_panel              — qr_panel="auto" fitted width model (calibrated
+                               on measured eq.(3) bound-constant drift —
+                               benchmarks/bench_error.py --grid)
+  resolve_norm_recompute     — norm_recompute cadence ('auto' = exact-norm
+                               panel every 8; bounds f32 downdate drift)
   householder_qr, cholesky_qr2 — beyond-paper panel factorizations
   panel_parallel_pivoted_qr  — distributed QRCP over a column-sharded sketch
                                (no per-device l x n replication — qr_dist)
@@ -21,7 +25,8 @@ Public API:
 from .errors import error_bound, expected_sigma_kp1, spectral_error, spectral_norm_dense
 from .distributed import rid_distributed, shard_columns
 from .qr import (blocked_pivoted_qr, cgs2_pivoted_qr, cholesky_qr2,
-                 householder_qr, pivoted_qr, resolve_panel)
+                 householder_qr, pivoted_qr, resolve_norm_recompute,
+                 resolve_panel)
 from .qr_dist import panel_parallel_pivoted_qr
 from .rid import rid, rid_from_sketch
 from .rsvd import rsvd, rsvd_from_id
@@ -33,6 +38,7 @@ __all__ = [
     "rid", "rid_from_sketch", "rsvd", "rsvd_from_id",
     "sketch", "srft_sketch", "srht_sketch", "gaussian_sketch", "fwht", "next_pow2",
     "cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr", "resolve_panel",
+    "resolve_norm_recompute",
     "panel_parallel_pivoted_qr",
     "householder_qr", "cholesky_qr2",
     "solve_upper_triangular", "solve_upper_triangular_xla", "interp_from_qr",

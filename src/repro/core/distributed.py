@@ -49,7 +49,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .qr import _h as _conj_t, pivoted_qr, resolve_panel
+from .qr import (_h as _conj_t, pivoted_qr, resolve_norm_recompute,
+                 resolve_panel)
 from .qr_dist import gather_columns_psum, panel_parallel_qr_local
 from .sketch import sketch as _sketch
 from .tsolve import solve_upper_triangular_xla
@@ -77,7 +78,7 @@ def _identity_at_owned_pivots(P_loc: jax.Array, piv: jax.Array, axis: str
 
 
 def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
-                  qr_impl: str, qr_panel: int):
+                  qr_impl: str, qr_panel: int, norm_recompute):
     """Per-device body for the REPLICATED-QR path; identical randomness on
     every device via a replicated key, so the replicated QR is bitwise
     identical too."""
@@ -85,7 +86,8 @@ def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
     def fn(key, A_loc):
         Y_loc = _sketch(key, A_loc, l, kind=sketch_kind).Y          # (l, n_loc), no comm
         Y = lax.all_gather(Y_loc, axis, axis=1, tiled=True)          # (l, n) full gather
-        qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel)          # replicated compute
+        qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel,          # replicated compute
+                        norm_recompute=norm_recompute)
         R1 = jnp.take(qr.R, qr.piv, axis=1)
         P_loc = solve_upper_triangular_xla(R1, _conj_t(qr.Q) @ Y_loc)  # no comm
         P_loc = _identity_at_owned_pivots(P_loc, qr.piv, axis)
@@ -95,14 +97,15 @@ def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
 
 
 def _local_rid_panel_parallel_fn(k: int, l: int, sketch_kind: str, axis: str,
-                                 ndev: int, qr_panel: int):
+                                 ndev: int, qr_panel: int, norm_recompute):
     """Per-device body for the PANEL-PARALLEL path: the sketch shard is
     factored in place (``core.qr_dist``) — no ``l x n`` array per device."""
 
     def fn(key, A_loc):
         Y_loc = _sketch(key, A_loc, l, kind=sketch_kind).Y           # (l, n_loc)
         Q, piv, R_loc = panel_parallel_qr_local(
-            Y_loc, k, axis=axis, ndev=ndev, panel=qr_panel)
+            Y_loc, k, axis=axis, ndev=ndev, panel=qr_panel,
+            norm_recompute=norm_recompute)
         # R1 = Q^H Y[:, piv] is exactly the pivot columns of the sharded
         # R = Q^H Y — a k x k psum gather, no extra GEMM.
         R1 = gather_columns_psum(R_loc, piv, axis)
@@ -118,7 +121,8 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
                     l: Optional[int] = None,
                     sketch_kind: str = "gaussian",
                     qr_impl: str = "blocked",
-                    qr_panel: int = 32) -> IDResult:
+                    qr_panel: int = 32,
+                    qr_norm_recompute="auto") -> IDResult:
     """Rank-``k`` randomized ID of a column-sharded ``A``.
 
     Returns an ``IDResult`` whose ``P`` stays column-sharded over ``axis``
@@ -137,8 +141,12 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
                             sharded over ``axis`` instead of replicated.
 
     ``qr_panel`` is the panel width for 'blocked' and 'panel_parallel'
-    (ignored by 'cgs2'); an int, or 'auto' for the eq.(3)-aware width
-    heuristic (``core.qr.resolve_panel``).
+    (ignored by 'cgs2'); an int, or 'auto' for the fitted eq.(3)-drift
+    width model (``core.qr.resolve_panel``).  ``qr_norm_recompute`` is
+    the fused panel loop's exact-norm cadence ('auto' = every 8 panels,
+    1 = every panel, 0 = never — ``core.qr.resolve_norm_recompute``); on
+    'panel_parallel' it is what bounds the f32 downdate drift of the
+    overlapped pivot psum (``core.qr_dist``).
     """
     l = 2 * k if l is None else l
     n = A.shape[1]
@@ -152,16 +160,18 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
     qr_panel = resolve_panel(qr_panel, k, l)
     if qr_panel < 1:
         raise ValueError(f"need qr_panel >= 1, got {qr_panel}")
+    resolve_norm_recompute(qr_norm_recompute)  # eager: reject before tracing
     ndev = mesh.shape[axis]
     if n % ndev:
         raise ValueError(f"n={n} must divide the '{axis}' axis ({ndev} devices)")
 
     if qr_impl == "panel_parallel":
         fn = _local_rid_panel_parallel_fn(k, l, sketch_kind, axis, ndev,
-                                          qr_panel)
+                                          qr_panel, qr_norm_recompute)
         r_spec = P(None, axis)       # R stays column-sharded, never gathered
     else:
-        fn = _local_rid_fn(k, l, sketch_kind, axis, qr_impl, qr_panel)
+        fn = _local_rid_fn(k, l, sketch_kind, axis, qr_impl, qr_panel,
+                           qr_norm_recompute)
         r_spec = P()                 # R is replicated by the redundant QR
     # check_vma=False: the replicated outputs (piv, Q, and R on the
     # gather-and-replicate path) are bitwise identical on every device —

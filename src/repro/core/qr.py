@@ -35,11 +35,31 @@ oracles and benchmark references.
 
 Panel width vs eq.(3) quality: wider panels mean fewer (GEMM-bound)
 trailing updates but rank the whole panel from ONE set of residual
-norms, so pivot quality drifts from the per-column oracle as k/panel
-grows.  At k ~ 100, ``panel=32`` can exceed the paper's eq.(3) error
-bound by ~2x while ``panel=16`` stays ~10x inside it; throughput favors
-32.  ``pivoted_qr(..., panel="auto")`` picks 16 when k is small relative
-to l (the bound-critical regime — paper-parity benches), 32 otherwise.
+norms, so pivot quality drifts from the per-column oracle as the ratio
+``panel * k / l`` grows.  ``pivoted_qr(..., panel="auto")`` resolves the
+width through a model FITTED to measured eq.(3) bound-constant drift
+(``benchmarks/bench_error.py --grid`` sweeps k x l x panel and records
+the per-width bound ratios into ``BENCH_scaling.json``): the widest
+power-of-two panel with ``panel * k / l <= _WIDTH_TAU`` is safe, so at
+the paper's universal oversampling ``l = 2k`` the model picks 16 —
+including the measured k ~ 100 cliff where ``panel=32`` exceeds the
+paper's bound by ~2x while 16 stays ~10x inside it — and relaxes to
+32/64 only when the oversampling ratio ``l/k`` leaves slack.  See
+``resolve_panel``.
+
+Residual-norm freshness (``norm_recompute``): the fused kernel here
+recomputes each panel's statistics exactly from the freshly deflated
+slab, so this engine never accumulates downdate error.  The DISTRIBUTED
+engine (core.qr_dist) is different: it downdates the norms GEQP3-style
+so its pivot psum can overlap the deflation, which accumulates f32
+cancellation noise on fast-decaying spectra.  ``norm_recompute``
+(default ``"auto"`` = every 8 panels; ``1`` = every panel, the
+paper-parity pin; ``0`` = never) sets the cadence at which that engine
+inserts an exact recompute panel (the ``panel_apply(...,
+emit_norms=True)`` kernel mode, serializing only that one panel's
+psum); it is accepted on both engines for one API shape and validated
+by ``resolve_norm_recompute``.  tests/test_error_bounds.py bounds the
+drift on a verification grid of spectra x dtypes x impls.
 
 Callers choose via ``pivoted_qr(Y, k, impl=...)`` with
 ``impl in {"cgs2", "blocked"}`` — ``cgs2`` is the paper-faithful parity
@@ -58,7 +78,8 @@ from ..kernels.panel_step import panel_step
 from .types import QRResult
 
 __all__ = ["cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr",
-           "householder_qr", "cholesky_qr2", "resolve_panel"]
+           "householder_qr", "cholesky_qr2", "resolve_panel",
+           "resolve_norm_recompute"]
 
 
 def _h(x: jax.Array) -> jax.Array:
@@ -279,9 +300,11 @@ def _panel_orthonormalize(Z: jax.Array, idx: jax.Array, Q_prev: jax.Array,
                     lambda: _panel_select_cgs2(Z, Q_prev, picked, b))
 
 
-@partial(jax.jit, static_argnames=("k", "panel", "panel_impl"))
+@partial(jax.jit, static_argnames=("k", "panel", "panel_impl",
+                                   "norm_recompute"))
 def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
-                       panel_impl: str = "fused") -> QRResult:
+                       panel_impl: str = "fused",
+                       norm_recompute="auto") -> QRResult:
     """Blocked-panel greedy-pivoted thin QR of the wide sketch ``Y`` (l x n).
 
     Per panel of ``b = panel`` pivots:
@@ -311,7 +334,16 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
     so the pivot set may differ from ``cgs2_pivoted_qr``'s on near-ties —
     the ID quality is the same (see tests/test_qr_blocked.py).  Panel
     width trades throughput against eq.(3) pivot quality (module
-    docstring); 32 is the production default, 16 the paper-parity choice.
+    docstring); 32 is the production default, 16 the fitted "auto" choice
+    at the paper's universal ``l = 2k`` oversampling.
+
+    ``norm_recompute`` is accepted (and validated) for API symmetry with
+    the distributed engine, where the cadence bounds the f32 downdate
+    drift (core.qr_dist).  On THIS path it is a no-op by construction:
+    the fused kernel re-derives every panel's statistics exactly from
+    the freshly deflated slab (``panel_step`` emits ``colnorms^2(O)``,
+    never a downdate), and the split oracles recompute from the residual
+    each panel — both already satisfy the tightest cadence.
 
     Returns ``QRResult(Q, R, piv)`` with ``R = Q^H Y``; ``R[:, piv]`` is
     upper triangular up to orthogonalization error, exactly like the
@@ -324,6 +356,7 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
         raise ValueError(f"need panel >= 1, got {panel}")
     if panel_impl not in ("fused", "auto", "chol", "house"):
         raise ValueError(f"unknown panel_impl {panel_impl!r}")
+    resolve_norm_recompute(norm_recompute)      # validated; no-op here (doc)
     dtype = Y.dtype
     rdtype = jnp.finfo(dtype).dtype
 
@@ -379,22 +412,67 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
     return QRResult(Q=Q, R=R, piv=piv)
 
 
+# --------------------------------------------------------------------------
+# Fitted panel-width model + norm-recompute cadence
+# --------------------------------------------------------------------------
+
+# Calibrated against the measured eq.(3) bound-constant drift recorded by
+# ``python -m benchmarks.bench_error --grid`` (rows bench="error_grid_width"
+# in BENCH_scaling.json): the bound ratio stays flat while
+# ``panel * k / l`` is below ~12 and inflates past the paper's constant
+# beyond ~16 (the k ~ 100, l = 2k, panel = 32 cliff sits at 16).  The model
+# picks the WIDEST power-of-two width whose predicted drift stays in the
+# flat region — wider panels mean fewer trailing updates, so throughput
+# wants the largest safe width, not the smallest.
+_WIDTH_TAU = 12.0
+_PANEL_WIDTHS = (64, 32, 16, 8)
+
+# "auto" recompute cadence: one exact-norm panel every 8 downdated panels
+# bounds the f32 drift to a single window's accumulation (~panel * 8
+# rounding steps) while serializing only 1-in-8 pivot psums.
+_NORM_RECOMPUTE_AUTO = 8
+
+
 def resolve_panel(panel, k: int, l: int) -> int:
-    """Resolve ``panel="auto"`` to a width: 16 when ``k`` is small
-    relative to ``l`` (2k <= l — the regime where the paper's eq.(3)
-    bound must hold and narrow panels keep pivot quality within it),
-    32 otherwise (throughput: fewer trailing updates).  Integers pass
-    through unchanged; any other string is rejected eagerly (not deep
-    inside a jitted comparison)."""
+    """Resolve ``panel="auto"`` through the fitted width model: the widest
+    width in ``_PANEL_WIDTHS`` with ``panel * k <= _WIDTH_TAU * l``
+    (falling back to the narrowest).  At the paper's universal ``l = 2k``
+    oversampling this yields 16 — the measured safe width at the k ~ 100
+    bound cliff — and relaxes to 32/64 only when ``l/k`` leaves slack
+    (heavy oversampling), where the one-shot panel ranking provably has
+    room.  Integers pass through unchanged; any other string is rejected
+    eagerly (not deep inside a jitted comparison)."""
     if isinstance(panel, str):
         if panel == "auto":
-            return 16 if 2 * k <= l else 32
+            for w in _PANEL_WIDTHS:
+                if w * k <= _WIDTH_TAU * l:
+                    return w
+            return _PANEL_WIDTHS[-1]
         raise ValueError(f"unknown panel {panel!r}; expected an int or 'auto'")
     return panel
 
 
+def resolve_norm_recompute(norm_recompute) -> int:
+    """Resolve the ``norm_recompute`` cadence to an int: recompute exact
+    residual norms every N fused panels (``0`` = never, ``1`` = every
+    panel — the paper-parity pin, ``"auto"`` = every 8).  Rejected
+    eagerly with the offending value so jitted callers fail fast."""
+    if norm_recompute is None:
+        return 0
+    if isinstance(norm_recompute, str):
+        if norm_recompute == "auto":
+            return _NORM_RECOMPUTE_AUTO
+        raise ValueError(f"unknown norm_recompute {norm_recompute!r}; "
+                         f"expected an int >= 0 or 'auto'")
+    if not isinstance(norm_recompute, int) or norm_recompute < 0:
+        raise ValueError(f"need norm_recompute >= 0 (or 'auto'), "
+                         f"got {norm_recompute!r}")
+    return norm_recompute
+
+
 def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
-               panel=32, panel_impl: str = "fused") -> QRResult:
+               panel=32, panel_impl: str = "fused",
+               norm_recompute="auto") -> QRResult:
     """Dispatch the pivoted QR of the sketch.
 
     ``impl="cgs2"``    — the paper's per-column iterated Gram-Schmidt
@@ -406,9 +484,11 @@ def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
                          split 'auto' | 'chol' | 'house' oracles; see
                          ``blocked_pivoted_qr``); ignored by cgs2.
 
-    ``panel`` may be an int or ``"auto"`` (``resolve_panel``): narrow
-    16-column panels when k is small relative to l so the paper's eq.(3)
-    error bound holds, 32 otherwise.
+    ``panel`` may be an int or ``"auto"`` (``resolve_panel``): the widest
+    panel the fitted eq.(3) drift model predicts safe for this (k, l) —
+    16 at the paper's ``l = 2k`` oversampling.  ``norm_recompute`` sets
+    the exact-norm recompute cadence of the fused path (module
+    docstring); ignored by cgs2.
 
     (The distributed-only 'panel_parallel' engine lives in
     ``core.qr_dist`` — it needs a mesh axis, not a replicated ``Y``.)
@@ -417,5 +497,6 @@ def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
         return cgs2_pivoted_qr(Y, k)
     if impl == "blocked":
         return blocked_pivoted_qr(Y, k, panel=resolve_panel(panel, k, Y.shape[0]),
-                                  panel_impl=panel_impl)
+                                  panel_impl=panel_impl,
+                                  norm_recompute=norm_recompute)
     raise ValueError(f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")

@@ -44,9 +44,19 @@ up to rounding, but the rounding compounds over k/panel panels, so on
 fast-decaying spectra in f32 the tail panels' statistics can drown in
 accumulated cancellation noise and pivot quality degrades relative to
 the recomputing 'gram' oracle (late junk pivots cannot be detected by
-the Q_p orthogonality check).  For bound-critical f32 runs at large
-k/panel, prefer ``panel_impl="gram"`` or f64; the parity tests bound
-the drift on the shapes we ship.
+the Q_p orthogonality check).  ``norm_recompute`` (default ``"auto"`` =
+every 8 panels) bounds that drift WITHOUT re-serializing every
+collective: on a recompute panel, stage B runs the
+``panel_apply(..., emit_norms=True)`` kernel mode — the deflated shard's
+TRUE column norms from the same fused pass — and the pivot psum is
+issued from those exact statistics (through the SAME
+``_scatter_res2_psum``), so only that 1-in-R psum waits on the
+deflation; every other panel keeps the overlap.  The drift therefore
+accumulates over at most one R-panel window instead of all k/panel
+panels.  Pin ``norm_recompute=1`` for paper-parity runs (every panel
+exact, fully serialized psums — the 'gram' oracle's freshness with the
+fused kernel's memory traffic), ``0`` to never recompute
+(tests/test_error_bounds.py measures exactly how far that drifts).
 
 Per-device storage is ``O(l * n/ndev + l * panel)`` and per-panel
 communication is ``O(n + l * panel)`` bytes — versus the replicated
@@ -71,7 +81,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..compat import shard_map
 from ..kernels.panel_gram import panel_gram
 from ..kernels.panel_step import panel_apply, panel_coeff
-from .qr import _h, householder_qr
+from .qr import _h, householder_qr, resolve_norm_recompute
 from .types import QRResult
 
 __all__ = ["panel_parallel_pivoted_qr", "panel_parallel_qr_local",
@@ -145,7 +155,8 @@ def _panel_qp_w(C: jax.Array, Z_loc: jax.Array
 
 def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
                             ndev: int, panel: int = 32,
-                            panel_impl: str = "fused"
+                            panel_impl: str = "fused",
+                            norm_recompute="auto"
                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-device body of the panel-parallel pivoted QR; call INSIDE a
     ``shard_map`` over ``axis`` with ``Y_loc`` the device's ``l x n/ndev``
@@ -155,19 +166,33 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
     ``kernels/panel_step`` with double-buffered collectives: stage A
     (factor + coefficients + downdated norms) feeds panel p+1's pivot
     psum BEFORE stage B (the shard deflation) runs, so the all-reduce
-    overlaps the GEMM.  ``panel_impl="gram"`` keeps the PR-2 split path
-    (``panel_gram`` + solves + XLA deflation, norms recomputed from the
-    deflated shard) as the serialized parity oracle.
+    overlaps the GEMM.  Every ``norm_recompute`` panels (``"auto"`` = 8,
+    ``1`` = every panel, ``0`` = never) stage B instead emits the
+    deflated shard's EXACT column norms (``panel_apply`` recompute mode)
+    and the psum is issued from those — bounding the f32 downdate drift
+    while serializing only that panel's collective (module docstring).
+    ``panel_impl="gram"`` keeps the PR-2 split path (``panel_gram`` +
+    solves + XLA deflation, norms recomputed from the deflated shard) as
+    the serialized parity oracle; it recomputes every panel by
+    construction and ignores ``norm_recompute``.
 
     Returns ``(Q, piv, R_loc)``: ``Q`` (l x k) and the global pivot
     indices ``piv`` (k,) are bitwise identical on every device (all inputs
     to their computation arrive through collectives), ``R_loc = Q^H Y_loc``
     (k x n_loc) stays sharded.
     """
-    if panel_impl not in ("fused", "gram"):
-        raise ValueError(f"unknown panel_impl {panel_impl!r}; "
-                         f"expected 'fused' or 'gram'")
     l, n_loc = Y_loc.shape
+    if not (0 < k <= min(l, n_loc * ndev)):
+        raise ValueError(f"panel_parallel_qr_local: need 0 < k <= "
+                         f"min(l, n); got k={k}, Y_loc of shape "
+                         f"{Y_loc.shape} over ndev={ndev}")
+    if panel < 1:
+        raise ValueError(f"panel_parallel_qr_local: need panel >= 1, "
+                         f"got panel={panel}")
+    if panel_impl not in ("fused", "gram"):
+        raise ValueError(f"panel_parallel_qr_local: unknown panel_impl "
+                         f"{panel_impl!r}; expected 'fused' or 'gram'")
+    recompute_every = resolve_norm_recompute(norm_recompute)
     n = n_loc * ndev
     dtype = Y_loc.dtype
     rdtype = jnp.finfo(dtype).dtype
@@ -182,6 +207,7 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
         # Prologue psum: panel 0's statistics from the undeflated shard.
         res2_loc = _masked_local_res2(Z, picked)
         res2_g = _scatter_res2_psum(res2_loc, n, axis)
+        p_i = 0                                # panel counter (recompute cadence)
         while pos < k:                         # static unroll: k/panel panels
             b = min(panel, k - pos)
             # 1. pivots from the psum issued LAST panel (double buffer).
@@ -212,16 +238,30 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
 
             Qp, W, r2d = lax.cond(
                 ok, lambda Qp=Qp, W=W, r2d=r2d: (Qp, W, r2d), _fallback)
-            # 4. bookkeeping, then ISSUE panel p+1's pivot psum — its
-            #    inputs are (W, picked), NOT the deflated shard, so the
-            #    collective is independent of stage B below and overlaps it.
+            # 4. bookkeeping for the pivot set everyone agreed on.
             loc = idx - off
             picked = picked.at[jnp.clip(loc, 0, n_loc - 1)].max(
                 (loc >= 0) & (loc < n_loc))
-            res2_loc = jnp.where(picked, jnp.asarray(-1.0, rdtype), r2d)
-            res2_g = _scatter_res2_psum(res2_loc, n, axis)
-            # 5. stage B: deflate OWN shard — the GEMM the psum hides behind.
-            Z = panel_apply(Qp, W, Z)
+            p_i += 1
+            if recompute_every and p_i % recompute_every == 0 and pos + b < k:
+                # RECOMPUTE panel: stage B emits the deflated shard's
+                # exact column norms from the same fused pass, and the
+                # pivot psum is issued from those — drift resets to zero
+                # at the cost of serializing THIS panel's collective.
+                Z, r2x = panel_apply(Qp, W, Z, emit_norms=True)
+                res2_loc = jnp.where(picked, jnp.asarray(-1.0, rdtype),
+                                     r2x.astype(rdtype))
+                res2_g = _scatter_res2_psum(res2_loc, n, axis)
+            else:
+                # ISSUE panel p+1's pivot psum from the DOWNDATED norms —
+                # its inputs are (W, picked), NOT the deflated shard, so
+                # the collective is independent of stage B below and
+                # overlaps it.
+                res2_loc = jnp.where(picked, jnp.asarray(-1.0, rdtype), r2d)
+                res2_g = _scatter_res2_psum(res2_loc, n, axis)
+                # 5. stage B: deflate OWN shard — the GEMM the psum hides
+                #    behind.
+                Z = panel_apply(Qp, W, Z)
             Q = Q.at[:, pos:pos + b].set(Qp)
             piv = piv.at[pos:pos + b].set(idx)
             pos += b
@@ -266,30 +306,37 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
 
 def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
                               axis: str = "data", panel: int = 32,
-                              panel_impl: str = "fused") -> QRResult:
+                              panel_impl: str = "fused",
+                              norm_recompute="auto") -> QRResult:
     """Standalone sharded entry point: pivoted thin QR of a column-sharded
     wide sketch ``Y`` (l x n) without ever materializing ``l x n`` on one
     device.  ``panel_impl`` picks the per-panel engine ('fused' — the
-    double-buffered kernel default — or 'gram', the PR-2 split oracle;
-    see ``panel_parallel_qr_local``).  Returns ``QRResult(Q, R, piv)``
-    with ``Q``/``piv`` replicated and ``R`` column-sharded over ``axis``
-    — the same contract as ``core.qr.pivoted_qr`` up to panel-granularity
-    pivot order.
+    double-buffered kernel default — or 'gram', the PR-2 split oracle)
+    and ``norm_recompute`` the fused path's exact-norm cadence ('auto' =
+    every 8 panels; see ``panel_parallel_qr_local``).  Returns
+    ``QRResult(Q, R, piv)`` with ``Q``/``piv`` replicated and ``R``
+    column-sharded over ``axis`` — the same contract as
+    ``core.qr.pivoted_qr`` up to panel-granularity pivot order.
     """
     l, n = Y.shape
     if not (0 < k <= min(l, n)):
-        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, l={l}, n={n}")
+        raise ValueError(f"panel_parallel_pivoted_qr: need 0 < k <= "
+                         f"min(l, n); got k={k}, l={l}, n={n}")
     if panel < 1:
-        raise ValueError(f"need panel >= 1, got {panel}")
+        raise ValueError(f"panel_parallel_pivoted_qr: need panel >= 1, "
+                         f"got panel={panel}")
     if panel_impl not in ("fused", "gram"):
-        raise ValueError(f"unknown panel_impl {panel_impl!r}; "
-                         f"expected 'fused' or 'gram'")
+        raise ValueError(f"panel_parallel_pivoted_qr: unknown panel_impl "
+                         f"{panel_impl!r}; expected 'fused' or 'gram'")
+    resolve_norm_recompute(norm_recompute)     # eager: reject before tracing
     ndev = mesh.shape[axis]
     if n % ndev:
-        raise ValueError(f"n={n} must divide the '{axis}' axis ({ndev} devices)")
+        raise ValueError(f"panel_parallel_pivoted_qr: n={n} must divide "
+                         f"the '{axis}' axis ({ndev} devices)")
 
     fn = partial(panel_parallel_qr_local, k=k, axis=axis, ndev=ndev,
-                 panel=panel, panel_impl=panel_impl)
+                 panel=panel, panel_impl=panel_impl,
+                 norm_recompute=norm_recompute)
     mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(None, axis),),

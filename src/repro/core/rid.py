@@ -35,11 +35,14 @@ from .types import IDResult
 __all__ = ["rid", "rid_from_sketch"]
 
 
-@partial(jax.jit, static_argnames=("k", "qr_impl", "qr_panel"))
+@partial(jax.jit, static_argnames=("k", "qr_impl", "qr_panel",
+                                   "qr_norm_recompute"))
 def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int, *,
-                    qr_impl: str = "blocked", qr_panel: int = 32) -> IDResult:
+                    qr_impl: str = "blocked", qr_panel: int = 32,
+                    qr_norm_recompute="auto") -> IDResult:
     """Steps 2-4 given an existing sketch ``Y`` (l x n)."""
-    qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel)
+    qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel,
+                    norm_recompute=qr_norm_recompute)
     P = interp_from_qr(qr.R, qr.piv)
     B = jnp.take(A, qr.piv, axis=1)
     # P is in sketch dtype (complex for SRFT); B carries A's dtype.  Cast P
@@ -53,7 +56,7 @@ def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int, *,
 
 def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
         sketch_kind: str = "srft", qr_impl: str = "blocked",
-        qr_panel: int = 32) -> IDResult:
+        qr_panel: int = 32, qr_norm_recompute="auto") -> IDResult:
     """Rank-``k`` randomized ID of ``A``: ``A ~= B @ P``.
 
     Args:
@@ -65,12 +68,17 @@ def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
       qr_impl: 'blocked' (panel GEMM engine, the production default) |
         'cgs2' (the paper-faithful parity oracle).
       qr_panel: panel width for the blocked engine (ignored by cgs2).
-        An int, or 'auto' to pick 16 when k is small relative to l (the
-        eq.(3)-bound-critical regime) and 32 otherwise — see
-        ``core.qr.resolve_panel``.
+        An int, or 'auto' for the widest width the fitted eq.(3) drift
+        model predicts safe at this (k, l) — 16 at the universal l = 2k
+        oversampling; see ``core.qr.resolve_panel``.
+      qr_norm_recompute: exact-norm recompute cadence of the fused panel
+        loop ('auto' = every 8 panels, 1 = every panel — the
+        paper-parity pin, 0 = never); ignored by cgs2.  See
+        ``core.qr.resolve_norm_recompute``.
     """
     l = 2 * k if l is None else l
     if l < k:
         raise ValueError(f"need l >= k, got l={l} < k={k}")
     Y = sketch(key, A, l, kind=sketch_kind).Y
-    return rid_from_sketch(A, Y, k, qr_impl=qr_impl, qr_panel=qr_panel)
+    return rid_from_sketch(A, Y, k, qr_impl=qr_impl, qr_panel=qr_panel,
+                           qr_norm_recompute=qr_norm_recompute)

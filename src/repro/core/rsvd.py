@@ -34,8 +34,10 @@ def rsvd_from_id(dec: IDResult) -> SVDResult:
 
 def rsvd(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
          sketch_kind: str = "gaussian", qr_impl: str = "blocked",
-         qr_panel: int = 32) -> SVDResult:
-    """Rank-``k`` randomized SVD of ``A`` via the ID.  ``qr_impl`` selects
-    the pivoted-QR engine of the underlying ID (see ``core.qr``)."""
+         qr_panel: int = 32, qr_norm_recompute="auto") -> SVDResult:
+    """Rank-``k`` randomized SVD of ``A`` via the ID.  ``qr_impl`` /
+    ``qr_panel`` / ``qr_norm_recompute`` select and tune the pivoted-QR
+    engine of the underlying ID (see ``core.qr``)."""
     return rsvd_from_id(rid(key, A, k, l=l, sketch_kind=sketch_kind,
-                            qr_impl=qr_impl, qr_panel=qr_panel))
+                            qr_impl=qr_impl, qr_panel=qr_panel,
+                            qr_norm_recompute=qr_norm_recompute))

@@ -1,10 +1,28 @@
-"""Synthetic token stream with a learnable structure.
+"""Synthetic data: token streams for the LM stack and KNOWN-SPECTRUM test
+matrices for the eq.(3) verification grid.
 
 Tokens follow a noisy periodic Markov-ish pattern (token ~ affine hash of
 position and a per-sequence phase, plus noise) so a real model TRAINS to
 a loss well below uniform — the end-to-end example needs a demonstrable
 learning curve, not white noise.  Generation is counter-based
 (threefry on (seed, step, index)) — O(1) seekable, host-shardable.
+
+``spectrum_sigmas`` / ``spectrum_matrix`` build matrices ``A = U S V^H``
+with an exactly known singular spectrum, so eq.(3) — which bounds
+``||A - BP||_2`` by a multiple of ``sigma_{k+1}`` — can be checked
+against the TRUE ``sigma_{k+1}`` instead of the paper's noise-floor
+estimate.  Three shapes cover the failure modes the blocked/fused QRCP
+engines are known to have (tests/test_error_bounds.py):
+
+  fast_decay — geometric decay down to ``floor``: the f32 residual-norm
+               DOWNDATE drift case (cancellation noise drowns the tail
+               panels' pivot statistics — core.qr_dist docstring);
+  cliff      — flat at 1.0 through index k-1 then a hard drop: the
+               pivot-QUALITY case (picking any k of the leading columns
+               is right; missing one costs a factor 1/gap);
+  noisy_tail — polynomial decay into a flat noise plateau: the
+               near-tie case (panel-granularity pivoting must not do
+               worse than the per-column oracle on ties).
 """
 from __future__ import annotations
 
@@ -13,6 +31,60 @@ from typing import Iterator, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+SPECTRA = ("fast_decay", "cliff", "noisy_tail")
+
+# Smallest spectrum floor per dtype that keeps sigma_{k+1} well above the
+# working precision's cancellation level — the single source the
+# verification-grid tests (tests/strategies.py) and the calibration bench
+# (benchmarks/bench_error.py --grid) both draw from, so the tested and
+# the recorded grids stay the same grid.
+DTYPE_FLOORS = {"float32": 1e-5, "complex64": 1e-5,
+                "float64": 1e-12, "complex128": 1e-12}
+
+
+def spectrum_sigmas(spectrum: str, r: int, k: int, *,
+                    floor: float = 1e-6) -> np.ndarray:
+    """The ``r`` singular values of a synthetic ``spectrum`` (see module
+    docstring), scaled so ``sigma_0 = 1``; ``floor`` sets the smallest
+    value (pick it well above the working dtype's cancellation level:
+    ~1e-5 for f32, ~1e-12 for f64)."""
+    if spectrum not in SPECTRA:
+        raise ValueError(f"unknown spectrum {spectrum!r}; expected one of "
+                         f"{SPECTRA}")
+    if not (0 < k < r):
+        raise ValueError(f"need 0 < k < r, got k={k}, r={r}")
+    i = np.arange(r, dtype=np.float64)
+    if spectrum == "fast_decay":
+        return floor ** (i / (r - 1))
+    if spectrum == "cliff":
+        # sqrt(floor) keeps the post-cliff block itself well-conditioned
+        # relative to the dtype while the k|k+1 gap stays hard.
+        return np.where(i < k, 1.0, np.sqrt(floor))
+    # noisy_tail: polynomial decay into a flat plateau at sqrt(floor)
+    return np.maximum((i + 1.0) ** -1.5, np.sqrt(floor))
+
+
+def spectrum_matrix(key: jax.Array, m: int, n: int, spectrum: str, k: int, *,
+                    r: Optional[int] = None, dtype=jnp.float64,
+                    floor: float = 1e-6) -> tuple[jax.Array, np.ndarray]:
+    """``(A, sigmas)``: an ``m x n`` matrix of rank ``r`` (default
+    ``min(2 * k + 16, m, n)``) with EXACTLY the singular values
+    ``spectrum_sigmas(spectrum, r, k, floor=floor)`` (up to the rounding
+    of two orthonormal factors), in ``dtype`` (real or complex).  The
+    true ``sigma_{k+1}`` is ``sigmas[k]`` — the eq.(3) reference."""
+    r = min(2 * k + 16, m, n) if r is None else r
+    sig = spectrum_sigmas(spectrum, r, k, floor=floor)
+    ku, kv, ku2, kv2 = jax.random.split(key, 4)
+    U = jax.random.normal(ku, (m, r), jnp.float64)
+    V = jax.random.normal(kv, (n, r), jnp.float64)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        U = U + 1j * jax.random.normal(ku2, (m, r), jnp.float64)
+        V = V + 1j * jax.random.normal(kv2, (n, r), jnp.float64)
+    U = jnp.linalg.qr(U)[0]
+    V = jnp.linalg.qr(V)[0]
+    A = (U * jnp.asarray(sig)[None, :]) @ V.conj().T
+    return A.astype(dtype), sig
 
 
 class SyntheticConfig(NamedTuple):

@@ -30,6 +30,15 @@ trailing deflation so the collective overlaps the GEMM
                             orthonormal panel by Pythagoras), NO ``O``;
   ``panel_apply_kernel``  — ``O = Z - Q_p W`` with ``W`` given, the
                             deflation pass the psum hides behind.
+                            ``emit_norms=True`` additionally emits
+                            ``colnorms^2(O)`` from the same VMEM
+                            residency — the periodic norm-RECOMPUTE mode
+                            (``norm_recompute`` in core.qr / core.qr_dist)
+                            that resets the f32 downdate drift every R
+                            panels: exact statistics at the cost of
+                            serializing THAT panel's psum behind the
+                            deflation (every other panel keeps the
+                            overlap).
 
 Degenerate (rank-deficient) panels: ``_chol_masked`` clamps the pivot at
 the dtype's tiny before the sqrt, so the kernel never emits NaN from a
@@ -232,24 +241,56 @@ def _panel_apply_body(qp_ref, w_ref, z_ref, o_ref):
     o_ref[...] = o.astype(z.dtype)
 
 
+def _panel_apply_body_norms(qp_ref, w_ref, z_ref, o_ref, r2_ref):
+    # Recompute mode: the deflated slab's TRUE column norms come out of
+    # the same VMEM residency (in the accumulator dtype, before the
+    # storage rounding of O), replacing the loop-carried downdate.
+    acc = acc_dtype_for(z_ref.dtype)
+    qp = qp_ref[...]                      # (l, b)
+    w = w_ref[...]                        # (b, bn)
+    z = z_ref[...]                        # (l, bn)
+    o = z.astype(acc) - jnp.dot(qp, w, preferred_element_type=acc)
+    o_ref[...] = o.astype(z.dtype)
+    r2_ref[...] = jnp.sum(o * o, axis=0, keepdims=True).astype(z.dtype)
+
+
 def panel_apply_kernel(qp: jax.Array, w: jax.Array, z: jax.Array, *,
-                       bn: int = 256, interpret: bool = True) -> jax.Array:
+                       bn: int = 256, interpret: bool = True,
+                       emit_norms: bool = False):
     """Raw pallas_call for the deflation half (distributed stage B):
     ``Z - Q_p W`` with ``W`` precomputed by ``panel_coeff_kernel`` — the
-    pass the next panel's norm psum runs concurrently with."""
+    pass the next panel's norm psum runs concurrently with.  With
+    ``emit_norms=True`` returns ``(O, colnorms^2(O))`` — the periodic
+    norm-recompute panel's exact pivot statistics."""
     l, b = qp.shape
     l2, n = z.shape
     assert l == l2 and w.shape == (b, n) and n % bn == 0, \
         (qp.shape, w.shape, z.shape, bn)
+    in_specs = [
+        pl.BlockSpec((l, b), lambda j: (0, 0)),
+        pl.BlockSpec((b, bn), lambda j: (0, j)),
+        pl.BlockSpec((l, bn), lambda j: (0, j)),
+    ]
+    if not emit_norms:
+        return pl.pallas_call(
+            _panel_apply_body,
+            grid=(cdiv(n, bn),),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((l, bn), lambda j: (0, j)),
+            out_shape=jax.ShapeDtypeStruct((l, n), z.dtype),
+            interpret=interpret,
+        )(qp, w, z)
     return pl.pallas_call(
-        _panel_apply_body,
+        _panel_apply_body_norms,
         grid=(cdiv(n, bn),),
-        in_specs=[
-            pl.BlockSpec((l, b), lambda j: (0, 0)),
-            pl.BlockSpec((b, bn), lambda j: (0, j)),
+        in_specs=in_specs,
+        out_specs=[
             pl.BlockSpec((l, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
         ],
-        out_specs=pl.BlockSpec((l, bn), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((l, n), z.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((l, n), z.dtype),
+            jax.ShapeDtypeStruct((1, n), z.dtype),
+        ],
         interpret=interpret,
     )(qp, w, z)

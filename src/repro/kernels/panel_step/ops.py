@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from ..common import interpret_default, pad_to, round_up
 from .kernel import panel_apply_kernel, panel_coeff_kernel, panel_step_kernel
-from .ref import panel_apply_ref, panel_coeff_ref, panel_step_ref
+from .ref import (panel_apply_norms_ref, panel_apply_ref, panel_coeff_ref,
+                  panel_step_ref)
 
 __all__ = ["panel_step", "panel_coeff", "panel_apply"]
 
@@ -62,18 +63,28 @@ def panel_coeff(c: jax.Array, z: jax.Array, res2: jax.Array, *,
     return qp, w[:, :n], r2[0, :n]
 
 
-@partial(jax.jit, static_argnames=("bn", "interpret"))
+@partial(jax.jit, static_argnames=("bn", "interpret", "emit_norms"))
 def panel_apply(qp: jax.Array, w: jax.Array, z: jax.Array, *,
-                bn: int = 256, interpret: bool | None = None) -> jax.Array:
+                bn: int = 256, interpret: bool | None = None,
+                emit_norms: bool = False):
     """Deflation half (distributed stage B): ``z - qp @ w`` with ``w``
     from ``panel_coeff`` — the pass the norm psum runs concurrently
-    with."""
+    with.  ``emit_norms=True`` returns ``(O, colnorms^2(O))`` from the
+    same fused pass: the EXACT pivot statistics of the deflated slab,
+    which a periodic ``norm_recompute`` panel substitutes for the
+    drift-accumulating downdate (core.qr_dist)."""
     interpret = interpret_default() if interpret is None else interpret
     if _is_complex(qp, z):
+        if emit_norms:
+            return panel_apply_norms_ref(qp, w, z)
         return panel_apply_ref(qp, w, z)
     l, n = z.shape
     b = qp.shape[1]
     np_ = round_up(n, bn)
     out = panel_apply_kernel(qp, pad_to(w, (b, np_)), pad_to(z, (l, np_)),
-                             bn=bn, interpret=interpret)
+                             bn=bn, interpret=interpret,
+                             emit_norms=emit_norms)
+    if emit_norms:
+        o, r2 = out
+        return o[:, :n], r2[0, :n]
     return out[:, :n]

@@ -54,3 +54,14 @@ def panel_coeff_ref(c: jax.Array, z: jax.Array, res2: jax.Array
 def panel_apply_ref(qp: jax.Array, w: jax.Array, z: jax.Array) -> jax.Array:
     """``Z - Q_p W`` with ``W`` precomputed (stage B)."""
     return z - qp @ w
+
+
+def panel_apply_norms_ref(qp: jax.Array, w: jax.Array, z: jax.Array
+                          ) -> tuple[jax.Array, jax.Array]:
+    """``(Z - Q_p W, colnorms^2(Z - Q_p W))`` — stage B in recompute mode:
+    the deflated slab AND its true column norms (the exact pivot
+    statistics a ``norm_recompute`` panel substitutes for the drifting
+    downdate)."""
+    rdtype = jnp.finfo(z.dtype).dtype
+    o = z - qp @ w
+    return o, jnp.sum(jnp.abs(o) ** 2, axis=0).astype(rdtype)

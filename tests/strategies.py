@@ -1,0 +1,79 @@
+"""Hypothesis strategies + spectrum helpers for the verification grid.
+
+Centralizes the optional-hypothesis shim the property tests share
+(``test_core_rid.py`` pioneered the pattern): when hypothesis is not
+installed (it is a dev-only dependency — requirements-dev.txt), ``given``
+becomes a decorator that replaces the test with a clean skip, so the
+smoke lane never hard-fails on the missing import.  Import ``given``,
+``settings``, ``st`` and ``HAVE_HYPOTHESIS`` from here instead of
+re-spelling the try/except in every property-test module.
+
+The strategies draw the (m, n, k, dtype, panel, spectrum) tuples the
+eq.(3) verification grid (tests/test_error_bounds.py) and the dispatcher
+parity property test sample over — deliberately SMALL shapes (the value
+of a property test is the corner cases, not the matrix size).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:     # property tests skip cleanly without the dep
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    st = None
+
+    def _skip_property_test(*_args, **_kwargs):
+        def deco(_fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(pip install -r requirements-dev.txt)")
+            def stub():
+                pass
+            stub.__name__ = getattr(_fn, "__name__", "property_test")
+            return stub
+        return deco
+
+    given = settings = _skip_property_test
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+    st = _StrategyStub()
+
+# Grid axes: spectra and floors come from the canonical tables next to
+# the matrix generator; the impl list is the dispatcher's own registry —
+# growing either automatically grows the tested grid.
+from repro.core.distributed import QR_IMPLS as GRID_IMPLS  # noqa: E402
+from repro.data.synthetic import (DTYPE_FLOORS as DTYPE_FLOOR,  # noqa: E402
+                                  SPECTRA)
+
+GRID_DTYPES = ("float32", "float64", "complex64")
+GRID_KS = (10, 40, 100)
+
+
+def qr_cases():
+    """Strategy for the dispatcher parity property test: a dict of
+    (l, n, k, dtype, panel) with l >= 2k and n comfortably wider, so
+    every engine is in its contract regime."""
+    return st.fixed_dictionaries({
+        "k": st.integers(4, 24),
+        "l_extra": st.integers(0, 24),      # l = 2k + l_extra
+        "n_extra": st.integers(8, 120),     # n = l + n_extra
+        "dtype": st.sampled_from(["float32", "float64", "complex128"]),
+        "panel": st.sampled_from([4, 8, 16, 32, "auto"]),
+        "seed": st.integers(0, 2 ** 16),
+    })
+
+
+def grid_cases():
+    """Strategy over the eq.(3) verification grid axes: spectrum x dtype
+    x impl x k, with k downscaled shapes (the slow lane runs the full
+    cartesian product explicitly; this samples it plus off-grid k)."""
+    return st.fixed_dictionaries({
+        "spectrum": st.sampled_from(list(SPECTRA)),
+        "dtype": st.sampled_from(list(GRID_DTYPES)),
+        "impl": st.sampled_from(list(GRID_IMPLS)),
+        "k": st.sampled_from([10, 16, 40]),
+        "seed": st.integers(0, 2 ** 16),
+    })

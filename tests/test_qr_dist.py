@@ -187,6 +187,36 @@ print("OK")
     assert "OK" in r.stdout
 
 
+def test_fused_norm_recompute_parity_8dev(subproc):
+    """ISSUE-4: the periodic norm-RECOMPUTE panel on 8 devices.  With the
+    cadence pinned to 1 every psum carries the deflated shards' exact
+    norms (the ``panel_apply`` recompute kernel mode + the same scatter
+    psum), so the fused engine must match the always-recomputing 'gram'
+    oracle pivot-for-pivot; cadence 2 mixes downdated and exact panels
+    and must stay oracle-grade too."""
+    r = subproc(PRELUDE + """
+key = jax.random.key(8)
+l, n, k = 48, 400, 24
+Y = lowrank(key, l, n, k)
+Ysh = shard_columns(Y, mesh, "data")
+qr_g = panel_parallel_pivoted_qr(Ysh, k, mesh=mesh, axis="data", panel=4,
+                                 panel_impl="gram")
+orc = cgs2_pivoted_qr(Y, k)
+scale = float(jnp.linalg.norm(Y))
+for nr in (1, 2):
+    qr_r = panel_parallel_pivoted_qr(Ysh, k, mesh=mesh, axis="data",
+                                     panel=4, norm_recompute=nr)
+    assert set(np.asarray(qr_r.piv).tolist()) == \\
+        set(np.asarray(qr_g.piv).tolist()), (nr, qr_r.piv, qr_g.piv)
+    assert len(set(np.asarray(qr_r.piv).tolist())) == k
+    assert orth_err(qr_r) < 1e-12, (nr, orth_err(qr_r))
+    assert recon_err(Y, qr_r) <= 10 * recon_err(Y, orc) + 1e-11 * scale
+print("OK")
+""")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
 def test_norm_psum_overlaps_deflation(subproc):
     """The double-buffered-collectives acceptance check, on the lowering:
 
@@ -322,6 +352,55 @@ def test_rid_distributed_validates_qr_panel():
     with pytest.raises(ValueError, match="need qr_panel >= 1"):
         rid_distributed(jax.random.key(0), A, 4, mesh=_one_dev_mesh(),
                         qr_impl="panel_parallel", qr_panel=0)
+
+
+def test_rid_distributed_validates_norm_recompute():
+    A = jnp.zeros((32, 16))
+    with pytest.raises(ValueError, match="norm_recompute.*got -3"):
+        rid_distributed(jax.random.key(0), A, 4, mesh=_one_dev_mesh(),
+                        qr_impl="panel_parallel", qr_norm_recompute=-3)
+
+
+def test_qr_local_validation_messages():
+    """Every eager check in panel_parallel_qr_local names the offending
+    argument AND the received value — uniformly, no bare asserts."""
+    from repro.core.qr_dist import panel_parallel_qr_local
+
+    Y_loc = jnp.zeros((16, 8))
+    with pytest.raises(ValueError,
+                       match=r"need 0 < k <= min\(l, n\); got k=40"):
+        panel_parallel_qr_local(Y_loc, 40, axis="data", ndev=2)
+    with pytest.raises(ValueError, match="need panel >= 1, got panel=0"):
+        panel_parallel_qr_local(Y_loc, 4, axis="data", ndev=2, panel=0)
+    with pytest.raises(ValueError,
+                       match="unknown panel_impl 'split'; expected"):
+        panel_parallel_qr_local(Y_loc, 4, axis="data", ndev=2,
+                                panel_impl="split")
+    with pytest.raises(ValueError, match="unknown norm_recompute 'always'"):
+        panel_parallel_qr_local(Y_loc, 4, axis="data", ndev=2,
+                                norm_recompute="always")
+    with pytest.raises(ValueError,
+                       match=r"need norm_recompute >= 0 \(or 'auto'\), "
+                             r"got -1"):
+        panel_parallel_qr_local(Y_loc, 4, axis="data", ndev=2,
+                                norm_recompute=-1)
+
+
+def test_panel_parallel_pivoted_qr_validation_messages():
+    """The sharded entry point repeats the same uniform contract."""
+    from repro.core import panel_parallel_pivoted_qr
+
+    mesh = _one_dev_mesh()
+    Y = jnp.zeros((16, 24))
+    with pytest.raises(ValueError,
+                       match=r"need 0 < k <= min\(l, n\); got k=0"):
+        panel_parallel_pivoted_qr(Y, 0, mesh=mesh)
+    with pytest.raises(ValueError, match="need panel >= 1, got panel=-2"):
+        panel_parallel_pivoted_qr(Y, 4, mesh=mesh, panel=-2)
+    with pytest.raises(ValueError, match="unknown panel_impl 'nope'"):
+        panel_parallel_pivoted_qr(Y, 4, mesh=mesh, panel_impl="nope")
+    with pytest.raises(ValueError, match="unknown norm_recompute 'n'"):
+        panel_parallel_pivoted_qr(Y, 4, mesh=mesh, norm_recompute="n")
 
 
 def test_uneven_shard_raises(subproc):

@@ -57,6 +57,58 @@ def test_engine_matches_reference_greedy(small_model):
 
 
 @pytest.mark.slow
+def test_admit_time_completion_frees_slot(small_model):
+    """PR-1 behavior, previously untested: a request whose FIRST greedy
+    token already completes it (max_new_tokens == 1) is finished AT
+    ADMIT — it never occupies a decode slot, so one _admit pass drains
+    an arbitrarily long queue through a tiny batch."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    rng = np.random.default_rng(1)
+    reqs = [GenerationRequest(request_id=i,
+                              prompt=rng.integers(0, cfg.vocab_size,
+                                                  3 + i).astype(np.int32),
+                              max_new_tokens=1)
+            for i in range(5)]                 # 5 requests >> 2 slots
+    for r in reqs:
+        eng.submit(r)
+    eng._admit()                               # ONE admit pass, no decode
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) == 1 for r in reqs)
+    assert eng._active == {}                   # no slot was ever occupied
+    assert eng._queue == []
+    assert eng._free_slots() == [0, 1]
+
+
+@pytest.mark.slow
+def test_admit_time_eos_never_occupies_decode_slot(small_model):
+    """EOS at admit: same-path regression — the completed request's slot
+    goes to the NEXT queued request in the same admit pass, and a full
+    run() completes both."""
+    cfg, params = small_model
+    prompt = np.arange(4, dtype=np.int32)
+    probe = ServeEngine(cfg, params, max_batch=1, max_len=64)
+    probe.submit(GenerationRequest(request_id=0, prompt=prompt,
+                                   max_new_tokens=1))
+    eos = probe.run()[0].output[0]             # the engine's own first token
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=64)
+    eos_req = GenerationRequest(request_id=0, prompt=prompt,
+                                max_new_tokens=50, eos_token=eos)
+    tail_req = GenerationRequest(request_id=1,
+                                 prompt=np.arange(1, 6, dtype=np.int32),
+                                 max_new_tokens=3)
+    eng.submit(eos_req)
+    eng.submit(tail_req)
+    eng._admit()                               # one pass over the queue
+    assert eos_req.done and len(eos_req.output) == 1   # finished at admit
+    # the single slot went to the FOLLOW-UP request, not the EOS one
+    assert [r.request_id for r in eng._active.values()] == [1]
+    done = eng.run()
+    assert {r.request_id for r in done} == {0, 1}
+    assert len(tail_req.output) == 3
+
+
+@pytest.mark.slow
 def test_engine_eos_stops(small_model):
     cfg, params = small_model
     prompt = np.arange(4, dtype=np.int32)

@@ -1,0 +1,113 @@
+"""Streaming RID scaling: peak device residency vs input size + the
+transfer/compute overlap of the two-stream pipeline (ISSUE 5).
+
+The claim under test is the subsystem's reason to exist: the streamed
+decomposition's device working set is ``O(l n + chunk_rows n)`` —
+FLAT in ``m`` — while the input grows without bound.  The sweep feeds
+host-resident matrices of growing ``m`` through ``rid_streamed``,
+samples ``jax.live_arrays()`` at every chunk boundary (both transfer
+buffers + the accumulator live: the streaming peak), and records
+
+  bench = "stream_scaling": m, n, k, chunk_rows, input_bytes,
+  peak_device_bytes, acc_bytes (the l x n accumulator),
+  wall_pipelined_s, wall_serialized_s, overlap_efficiency
+  (= serialized / pipelined; ~1.0 on CPU where host->device is a
+  no-op copy, > 1 wherever a DMA engine overlaps the accumulate GEMM)
+
+into ``BENCH_scaling.json`` (benchmarks/run.py contract).  The run
+asserts the acceptance shape: the largest input exceeds its own
+streaming working set (a decomposition that could NOT have run with a
+single resident buffer of the same budget), and the peak stays flat
+across the sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import rid_streamed
+from repro.stream import ArraySource, ChunkSource
+
+from .common import append_json_rows, emit
+
+
+class MeteredSource:
+    """Wrap a ChunkSource; sample total live device bytes at every chunk
+    fetch — the hook runs between pipeline steps, exactly when both
+    chunk buffers and the sketch accumulator coexist."""
+
+    def __init__(self, inner: ChunkSource):
+        self._inner = inner
+        self.shape = inner.shape
+        self.dtype = inner.dtype
+        self.chunk_rows = inner.chunk_rows
+        self.peak_bytes = 0
+
+    def chunk(self, c: int):
+        live = sum(int(x.nbytes) for x in jax.live_arrays())
+        self.peak_bytes = max(self.peak_bytes, live)
+        return self._inner.chunk(c)
+
+
+def _walled(fn):
+    fn()                                     # warm the per-shape jit caches
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def stream_sweep(*, full=False, json_path=None):
+    n, k, chunk_rows = 512, 48, 512
+    ms = (8192, 16384, 32768, 131072) if full else (8192, 16384, 32768)
+    l = 2 * k
+    rows = []
+    for m in ms:
+        A = np.asarray(np.random.default_rng(3).standard_normal((m, n)),
+                       np.float32)
+        key = jax.random.key(1)
+        src = MeteredSource(ArraySource(A, chunk_rows))
+        dec, wall_pipe = _walled(
+            lambda: jax.block_until_ready(
+                rid_streamed(key, src, k).P))
+        _, wall_serial = _walled(
+            lambda: jax.block_until_ready(
+                rid_streamed(key, src, k, overlap=False).P))
+        rows.append({
+            "bench": "stream_scaling", "m": m, "n": n, "k": k,
+            "chunk_rows": chunk_rows,
+            "input_bytes": m * n * A.itemsize,
+            "peak_device_bytes": src.peak_bytes,
+            "acc_bytes": l * n * 4,          # f32 accumulator
+            "wall_pipelined_s": wall_pipe,
+            "wall_serialized_s": wall_serial,
+            "overlap_efficiency": wall_serial / wall_pipe,
+        })
+    emit(rows, header="streaming RID: peak device residency (flat in m) "
+                      "vs input size; two-stream overlap")
+    if json_path:
+        append_json_rows(json_path, rows)
+    # Acceptance shape: the largest input exceeds the streaming working
+    # set it was decomposed with, and the working set is flat in m.
+    last = rows[-1]
+    assert last["input_bytes"] > last["peak_device_bytes"], \
+        (last["input_bytes"], last["peak_device_bytes"])
+    peaks = [r["peak_device_bytes"] for r in rows]
+    assert max(peaks) < 2 * min(peaks), f"peak residency grows with m: {peaks}"
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append stream_scaling rows to this JSON record "
+                         "(the BENCH_scaling.json contract)")
+    args = ap.parse_args(argv)
+    stream_sweep(full=args.full, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Per-PR bound-ratio RATCHET (ROADMAP open item): fail CI when the
+eq.(3) verification grid's worst bound ratios regress by more than
+``RATCHET_FACTOR`` against the committed baseline.
+
+The error grid (``bench_error --grid``) records one
+``bench = "error_grid_summary"`` row per (impl, dtype) with the worst
+``err / bound`` over the whole spectra x k grid.  The committed
+``BENCH_scaling.json`` carries the last recorded summary — the quality
+trajectory; the CI bench job regenerates a fresh grid into
+``BENCH_error_grid.json`` and this module compares the two:
+
+    PYTHONPATH=src python -m benchmarks.ratchet \
+        --baseline BENCH_baseline.json --fresh BENCH_error_grid.json
+
+A fresh worst ratio above ``factor * max(baseline, floor)`` is a
+regression; a (impl, dtype) cell present in the baseline but MISSING
+from the fresh grid is also flagged (silent coverage loss reads as a
+pass).  New cells (an impl the baseline predates) ratchet from their
+first recorded run.  ``floor`` keeps noise-level ratios (everything
+here sits orders of magnitude inside the bound) from tripping on
+roundoff-scale wiggle.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RATCHET_FACTOR = 2.0
+# Ratios below this are measuring roundoff, not pivot quality — a 2x
+# swing at 1e-5 is noise; at 1e-2 it is a real quality loss.
+RATCHET_FLOOR = 1e-4
+
+
+def summary_ratios(rows: list[dict]) -> dict[tuple[str, str], float]:
+    """(impl, dtype) -> worst_ratio from error_grid_summary rows; a later
+    duplicate (a re-recorded trajectory) wins."""
+    out = {}
+    for r in rows:
+        if r.get("bench") == "error_grid_summary":
+            out[(r["impl"], r["dtype"])] = float(r["worst_ratio"])
+    return out
+
+
+def check_ratchet(baseline_rows: list[dict], fresh_rows: list[dict], *,
+                  factor: float = RATCHET_FACTOR,
+                  floor: float = RATCHET_FLOOR) -> list[str]:
+    """Regression messages (empty = ratchet holds)."""
+    base = summary_ratios(baseline_rows)
+    fresh = summary_ratios(fresh_rows)
+    problems = []
+    if not fresh:
+        return ["fresh record has no error_grid_summary rows — did the "
+                "grid run?"]
+    if not base:
+        # An empty baseline would make every future run vacuously green —
+        # the silent-coverage-loss failure mode, on the other side.
+        return ["baseline record has no error_grid_summary rows — was the "
+                "committed BENCH_scaling.json regenerated without --grid?"]
+    for key in sorted(base):
+        impl, dtype = key
+        if key not in fresh:
+            problems.append(f"{impl}/{dtype}: present in baseline but "
+                            f"missing from the fresh grid (coverage loss)")
+            continue
+        limit = factor * max(base[key], floor)
+        if fresh[key] > limit:
+            problems.append(
+                f"{impl}/{dtype}: worst bound ratio {fresh[key]:.3e} > "
+                f"{factor:g}x baseline {base[key]:.3e} (limit {limit:.3e})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed JSON record carrying the last "
+                         "error_grid_summary rows (BENCH_scaling.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated grid record "
+                         "(BENCH_error_grid.json)")
+    ap.add_argument("--factor", type=float, default=RATCHET_FACTOR)
+    ap.add_argument("--floor", type=float, default=RATCHET_FLOOR)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    problems = check_ratchet(baseline, fresh, factor=args.factor,
+                             floor=args.floor)
+    if problems:
+        print("bound-ratio ratchet FAILED:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n = len(summary_ratios(fresh))
+    print(f"bound-ratio ratchet ok: {n} (impl, dtype) cells within "
+          f"{args.factor:g}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

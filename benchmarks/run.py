@@ -36,7 +36,7 @@ def main():
     js = ["--json", args.bench_json] if args.bench_json else []
 
     from . import (bench_error, bench_qr, bench_scaling, bench_sketch,
-                   bench_total, bench_tsolve, roofline)
+                   bench_stream, bench_total, bench_tsolve, roofline)
 
     section("Table 1: total RID runtime (phases)")
     bench_total.main(flags)
@@ -50,6 +50,8 @@ def main():
     bench_error.main(flags)
     section("eq.(3) verification grid (known spectra) + width calibration")
     bench_error.main(flags + ["--grid", *js])
+    section("Streaming RID: flat device residency vs input size")
+    bench_stream.main(flags + js)
     if not args.skip_scaling:
         section("Figures 1-2: structural parallel scaling")
         bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6",

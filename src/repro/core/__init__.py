@@ -20,6 +20,10 @@ Public API:
   solve_upper_triangular     — the column-parallel interpolation solve
   rid_distributed            — shard_map column-parallel RID (paper section 3;
                                qr_impl in {'cgs2','blocked','panel_parallel'})
+  rid_streamed               — out-of-core streaming RID over a ChunkSource
+                               (repro.stream): peak device memory O(l n +
+                               chunk), bit-for-bit equal to rid for the
+                               same key
   spectral_error, error_bound — paper eq. (3) validation utilities
 """
 from .errors import error_bound, expected_sigma_kp1, spectral_error, spectral_norm_dense
@@ -34,6 +38,16 @@ from .sketch import fwht, gaussian_sketch, next_pow2, sketch, srft_sketch, srht_
 from .tsolve import interp_from_qr, solve_upper_triangular, solve_upper_triangular_xla
 from .types import IDResult, QRResult, SketchResult, SVDResult
 
+
+def __getattr__(name):
+    # Lazy: repro.stream imports back into core (shared _qr_interp /
+    # sketch helpers), so an eager import here would re-enter the stream
+    # module mid-initialization when ``import repro.stream`` comes first.
+    if name == "rid_streamed":
+        from ..stream.rid_stream import rid_streamed
+        return rid_streamed
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "rid", "rid_from_sketch", "rsvd", "rsvd_from_id",
     "sketch", "srft_sketch", "srht_sketch", "gaussian_sketch", "fwht", "next_pow2",
@@ -42,7 +56,7 @@ __all__ = [
     "panel_parallel_pivoted_qr",
     "householder_qr", "cholesky_qr2",
     "solve_upper_triangular", "solve_upper_triangular_xla", "interp_from_qr",
-    "rid_distributed", "shard_columns",
+    "rid_distributed", "shard_columns", "rid_streamed",
     "spectral_error", "spectral_norm_dense", "error_bound", "expected_sigma_kp1",
     "IDResult", "QRResult", "SketchResult", "SVDResult",
 ]

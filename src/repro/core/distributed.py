@@ -7,6 +7,13 @@ mesh-level).  Phase costs by ``qr_impl``:
 
   sketch        : zero communication — every backend acts on the row index
                   only, so each device sketches its own column block.
+                  (Scope note: the streamed/in-memory BIT-FOR-BIT replay
+                  contract of rid/rid_streamed does NOT extend here —
+                  shard-local sketch GEMMs have different shapes than the
+                  full-width one, and the whole body runs inside one jit.
+                  THIS path's replay guarantee is the per-program one:
+                  same key, same mesh -> same result, and the replicated
+                  outputs bitwise identical on every device.)
   pivoted QR    :
     'cgs2' /    one ``all_gather`` of the ``l x n_local`` sketches, then
     'blocked'   REPLICATED factorization on every device.  Per device:

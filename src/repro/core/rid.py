@@ -8,7 +8,15 @@ Pipeline (paper section 2):                      cost (paper's accounting)
 
 ``rid`` is jit-compatible (k, l static).  Every stage takes an explicit
 PRNG key; the same key reproduces the same decomposition bit-for-bit,
-which the fault-tolerance layer relies on for replay.
+which the fault-tolerance layer relies on for replay.  The replay
+contract extends OUT-OF-CORE: ``repro.stream.rid_streamed`` reproduces
+``rid``'s gaussian-sketch result exactly without ever holding ``A`` on
+device, because the sketch reduction is canonically blocked
+(``kernels/sketch_accum``) and steps 2-3 run through the shared
+``_qr_interp`` jit boundary below.  (For that reason the default entry
+points compose separately-jitted stages rather than one outer jit —
+wrapping them in a caller's jit is still fine, but the wrapped result
+is only bit-identical to itself.)
 
 Step 2 has two engines, selected by ``qr_impl``:
 
@@ -37,21 +45,36 @@ __all__ = ["rid", "rid_from_sketch"]
 
 @partial(jax.jit, static_argnames=("k", "qr_impl", "qr_panel",
                                    "qr_norm_recompute"))
+def _qr_interp(Y: jax.Array, k: int, qr_impl: str, qr_panel: int,
+               qr_norm_recompute):
+    """Steps 2-3 (pivoted QR of the sketch + interpolation solve) as ONE
+    shared jit boundary: both ``rid_from_sketch`` and the streaming
+    ``repro.stream.rid_streamed`` call exactly this computation, so the
+    same sketch bits yield the same ``(P, piv, Q, R)`` bits on either
+    path (the streamed replay guarantee)."""
+    qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel,
+                    norm_recompute=qr_norm_recompute)
+    P = interp_from_qr(qr.R, qr.piv)
+    return P, qr.piv, qr.Q, qr.R
+
+
+def _cast_interp(P: jax.Array, a_dtype) -> jax.Array:
+    """P is in sketch dtype (complex for SRFT); cast to ``A``'s dtype when
+    ``A`` is real and the sketch was complex: the imaginary part is pure
+    roundoff because A's row space is real."""
+    if jnp.issubdtype(P.dtype, jnp.complexfloating) and not jnp.issubdtype(
+            a_dtype, jnp.complexfloating):
+        return P.real.astype(a_dtype)
+    return P
+
+
 def rid_from_sketch(A: jax.Array, Y: jax.Array, k: int, *,
                     qr_impl: str = "blocked", qr_panel: int = 32,
                     qr_norm_recompute="auto") -> IDResult:
     """Steps 2-4 given an existing sketch ``Y`` (l x n)."""
-    qr = pivoted_qr(Y, k, impl=qr_impl, panel=qr_panel,
-                    norm_recompute=qr_norm_recompute)
-    P = interp_from_qr(qr.R, qr.piv)
-    B = jnp.take(A, qr.piv, axis=1)
-    # P is in sketch dtype (complex for SRFT); B carries A's dtype.  Cast P
-    # to A's dtype when A is real and the sketch was complex: the imaginary
-    # part is pure roundoff because A's row space is real.
-    if jnp.issubdtype(P.dtype, jnp.complexfloating) and not jnp.issubdtype(
-            A.dtype, jnp.complexfloating):
-        P = P.real.astype(A.dtype)
-    return IDResult(B=B, P=P, J=qr.piv, Q=qr.Q, R=qr.R)
+    P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel, qr_norm_recompute)
+    B = jnp.take(A, piv, axis=1)
+    return IDResult(B=B, P=_cast_interp(P, A.dtype), J=piv, Q=Q, R=R)
 
 
 def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,

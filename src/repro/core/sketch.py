@@ -9,8 +9,8 @@ Three interchangeable backends (paper section 2 + DESIGN.md section 2):
                  Walsh-Hadamard transform (power-of-two butterflies that
                  block cleanly into VMEM — see ``repro.kernels.srht``),
                  and the same row sampling.
-* ``gaussian`` — ``Y = Omega A`` as a single dense matmul.  On TPU the
-                 MXU makes this the wall-clock winner for moderate ``m``
+* ``gaussian`` — ``Y = Omega A`` as dense GEMM work.  On TPU the MXU
+                 makes this the wall-clock winner for moderate ``m``
                  despite the worse O(l m n) flop count; the paper itself
                  invites replacing the randomization step with whatever
                  is fastest on the target machine.
@@ -18,6 +18,23 @@ Three interchangeable backends (paper section 2 + DESIGN.md section 2):
 All backends act on the ROW index of ``A`` only, so a column-sharded
 ``A`` sketches with ZERO communication (the property the paper's XMT
 implementation exploits via column-parallel FFTs).
+
+The gaussian backend is additionally ROW-STREAMABLE, and is defined so
+that streaming is bit-for-bit exact:
+
+  * ``Omega``'s columns are generated per canonical ``ACCUM_BLOCK``-row
+    block from ``fold_in(key, block_index)`` (``gaussian_omega_cols``),
+    so any row range at block granularity reproduces exactly the same
+    operator values without materializing the rest;
+  * the reduction ``Y = Omega A`` runs through the canonically-blocked
+    ``kernels/sketch_accum`` op, which pins ONE floating-point
+    association for the row sum regardless of how the rows arrive.
+
+``repro.stream.rid_streamed`` replays both pieces chunk-at-a-time and
+therefore reproduces this module's in-memory sketch exactly — the
+replay guarantee ``rid``'s docstring promises, extended out-of-core.
+(srft/srht mix ALL ``m`` rows through an FFT/FWHT, so they cannot
+stream row chunks.)
 """
 from __future__ import annotations
 
@@ -27,6 +44,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
 from .types import SketchResult
 
 __all__ = [
@@ -34,6 +52,8 @@ __all__ = [
     "srft_sketch",
     "srht_sketch",
     "gaussian_sketch",
+    "gaussian_omega_cols",
+    "finalize_gaussian_sketch",
     "fwht",
     "next_pow2",
 ]
@@ -109,20 +129,68 @@ def srht_sketch(key: jax.Array, A: jax.Array, l: int) -> jax.Array:
     return HDA[rows] * scale
 
 
-@partial(jax.jit, static_argnames=("l",))
-def gaussian_sketch(key: jax.Array, A: jax.Array, l: int) -> jax.Array:
-    """Dense Gaussian sketch ``Y = Omega A`` — one MXU matmul, no FFT."""
-    m = A.shape[0]
-    if jnp.issubdtype(A.dtype, jnp.complexfloating):
-        rdtype = jnp.float64 if A.dtype == jnp.complex128 else jnp.float32
-        kr, ki = jax.random.split(key)
-        omega = (jax.random.normal(kr, (l, m), dtype=rdtype)
-                 + 1j * jax.random.normal(ki, (l, m), dtype=rdtype)).astype(A.dtype)
-        omega = omega * jnp.asarray(1.0 / math.sqrt(2 * l), dtype=A.dtype)
+@partial(jax.jit, static_argnames=("nb", "l", "dtype"))
+def _omega_blocks(key: jax.Array, b0, nb: int, l: int, dtype) -> jax.Array:
+    """UNSCALED gaussian operator columns for canonical row blocks
+    ``[b0, b0 + nb)``: an ``(l, nb * ACCUM_BLOCK)`` slab whose block ``b``
+    is drawn entirely from ``fold_in(key, b)`` — so the values of any
+    block depend only on ``(key, b)``, never on which other blocks the
+    caller happens to generate alongside it.  ``b0`` is a TRACED operand
+    (fold_in is integer hashing, value-exact either way): a streamed
+    pass over thousands of chunks reuses one compile per chunk SHAPE
+    instead of compiling per chunk INDEX."""
+    blocks = jnp.asarray(b0, jnp.int32) + jnp.arange(nb, dtype=jnp.int32)
+    keys = jax.vmap(lambda b: jax.random.fold_in(key, b))(blocks)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        rdtype = jnp.float64 if dtype == jnp.complex128 else jnp.float32
+
+        def one(kk):
+            kr, ki = jax.random.split(kk)
+            return (jax.random.normal(kr, (ACCUM_BLOCK, l), rdtype)
+                    + 1j * jax.random.normal(ki, (ACCUM_BLOCK, l), rdtype))
     else:
-        omega = jax.random.normal(key, (l, m), dtype=A.dtype)
-        omega = omega * jnp.asarray(1.0 / math.sqrt(l), dtype=A.dtype)
-    return omega @ A
+        def one(kk):
+            return jax.random.normal(kk, (ACCUM_BLOCK, l), dtype)
+    omega_t = jax.vmap(one)(keys).reshape(nb * ACCUM_BLOCK, l)
+    return omega_t.T.astype(dtype)
+
+
+def gaussian_omega_cols(key: jax.Array, r0: int, r1: int, l: int,
+                        dtype) -> jax.Array:
+    """Columns ``[r0, r1)`` of the gaussian operator ``Omega`` (l x m),
+    unscaled (``finalize_gaussian_sketch`` applies the 1/sqrt(l) at the
+    end, where it is exact for every chunking).  ``r0`` must sit on a
+    canonical block boundary — the granularity at which the operator is
+    seeded (module docstring)."""
+    if r0 % ACCUM_BLOCK:
+        raise ValueError(f"need r0 a multiple of ACCUM_BLOCK={ACCUM_BLOCK}, "
+                         f"got r0={r0}")
+    b0, nb = r0 // ACCUM_BLOCK, -(-(r1 - r0) // ACCUM_BLOCK)
+    return _omega_blocks(key, b0, nb, l, jnp.dtype(dtype))[:, :r1 - r0]
+
+
+@partial(jax.jit, static_argnames=("l", "dtype"))
+def finalize_gaussian_sketch(acc: jax.Array, l: int, dtype) -> jax.Array:
+    """Scale the canonical accumulator into the sketch: ``1/sqrt(l)``
+    (``1/sqrt(2l)`` for complex — each entry of ``Omega`` keeps variance
+    ``1/l``) and cast to the input dtype."""
+    cx = jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating)
+    scale = 1.0 / math.sqrt(2 * l if cx else l)
+    rdt = jnp.finfo(acc.dtype).dtype
+    return (acc * jnp.asarray(scale, rdt)).astype(dtype)
+
+
+def gaussian_sketch(key: jax.Array, A: jax.Array, l: int) -> jax.Array:
+    """Dense Gaussian sketch ``Y = Omega A`` through the CANONICAL
+    accumulation path (``kernels/sketch_accum``): block-seeded operator
+    columns, fixed-block row reduction, one final scale.  Exactly the
+    computation ``repro.stream.rid_streamed`` replays chunk-at-a-time,
+    which is what makes streamed and in-memory sketches bit-for-bit
+    identical.  Deliberately NOT jitted as a whole: ``sketch_accum``
+    must stay its own jit boundary for that replay contract to hold."""
+    m = A.shape[0]
+    omega = gaussian_omega_cols(key, 0, m, l, A.dtype)
+    return finalize_gaussian_sketch(sketch_accum(omega, A), l, A.dtype)
 
 
 _BACKENDS = {

@@ -65,6 +65,106 @@ def spectrum_sigmas(spectrum: str, r: int, k: int, *,
     return np.maximum((i + 1.0) ** -1.5, np.sqrt(floor))
 
 
+class SpectrumFactors(NamedTuple):
+    """Row-generable factorization ``A = D U S V^H`` with EXACT singular
+    values (``spectrum_rows`` evaluates any row range in closed form):
+
+      ``U``  — ``r`` distinct orthonormal DCT-II (real) / DFT (complex)
+               basis columns, picked by seeded frequencies: row ``i`` of
+               column ``j`` is a cosine/phasor evaluated at ``(i, f_j)``,
+               so a chunk of rows never needs the rest of the matrix;
+      ``D``  — a seeded unit-modulus row diagonal (signs / phases,
+               hashed per GLOBAL row index), which randomizes the row
+               space without touching the spectrum;
+      ``V``  — dense orthonormal ``n x r`` from QR of a seeded normal
+               (``n`` is the sketch-resident dimension, fine to hold).
+
+    This is the streaming analogue of ``spectrum_matrix``: the eq.(3)
+    tests can scale ``m`` out-of-core while still knowing sigma_{k+1}
+    exactly (``repro.stream.SpectrumSource`` wraps it as a ChunkSource).
+    """
+
+    freqs: np.ndarray       # (r,) int64 HOST array of distinct frequencies
+    V: jax.Array            # (n, r) orthonormal right factor (f64/c128)
+    sig: np.ndarray         # (r,) exact singular values, descending
+    sign_key: jax.Array     # per-row unit-modulus diagonal seed
+    m: int
+    dtype: jnp.dtype
+
+
+def _distinct_ints(key: jax.Array, r: int, lo: int, hi: int) -> jax.Array:
+    """``r`` distinct seeded integers in ``[lo, hi)`` with O(r) memory —
+    NOT ``random.choice(replace=False)``, whose internal permutation is
+    O(hi) and would make the streaming-scale generator OOM at the very
+    ``m`` it exists for.  Uniform f64 draws (exact integers below 2^53)
+    deduplicated host-side; collisions at ``r << hi`` are rare, so a
+    couple of rounds suffice."""
+    if hi - lo < r:
+        raise ValueError(f"need hi - lo >= r, got [{lo}, {hi}) for r={r}")
+    vals = np.empty(0, np.int64)
+    while vals.size < r:
+        key, sub = jax.random.split(key)
+        u = np.asarray(jax.random.uniform(sub, (2 * r,), jnp.float64))
+        draw = lo + np.floor(u * (hi - lo)).astype(np.int64)
+        vals = np.unique(np.concatenate([vals, draw]))
+    # Host int64 (NOT a device int32 array): frequencies reach m, which
+    # overflows int32 exactly at the out-of-core scales this exists for.
+    return vals[:r]
+
+
+def spectrum_factors(key: jax.Array, m: int, n: int, spectrum: str, k: int, *,
+                     r: Optional[int] = None, dtype=jnp.float64,
+                     floor: float = 1e-6) -> SpectrumFactors:
+    """Build the row-generable known-spectrum factorization (see
+    ``SpectrumFactors``).  Requires ``r <= m - 1`` distinct nonzero
+    frequencies (real DCT basis) — trivially true at streaming scales."""
+    # Default clamps to m - 1 (unlike spectrum_matrix's min(.., m, ..)):
+    # the real DCT basis has only m - 1 nonzero frequencies to draw from.
+    r = min(2 * k + 16, m - 1, n) if r is None else r
+    if r > min(m - 1, n):
+        raise ValueError(f"need r <= min(m - 1, n), got r={r}, m={m}, n={n}")
+    sig = spectrum_sigmas(spectrum, r, k, floor=floor)
+    dtype = jnp.dtype(dtype)
+    cx = jnp.issubdtype(dtype, jnp.complexfloating)
+    kf, kv, kv2, ks = jax.random.split(key, 4)
+    if cx:
+        freqs = _distinct_ints(kf, r, 0, m)
+    else:
+        freqs = _distinct_ints(kf, r, 1, m)
+    V = jax.random.normal(kv, (n, r), jnp.float64)
+    if cx:
+        V = V + 1j * jax.random.normal(kv2, (n, r), jnp.float64)
+    V = jnp.linalg.qr(V)[0]
+    return SpectrumFactors(freqs=freqs, V=V, sig=sig,
+                           sign_key=ks, m=m, dtype=dtype)
+
+
+def spectrum_rows(f: SpectrumFactors, r0: int, r1: int) -> jax.Array:
+    """Rows ``[r0, r1)`` of the factored matrix, in ``f.dtype``.  Each row
+    depends only on its global index, so any chunking of ``[0, m)``
+    concatenates to the same matrix."""
+    i = jnp.arange(r0, r1)
+    keys = jax.vmap(lambda ii: jax.random.fold_in(f.sign_key, ii))(i)
+    # i * f reaches ~m^2: form the products in f64 (exact below 2^53) and
+    # reduce modulo the basis period BEFORE the 2*pi scaling, so the
+    # trig arguments stay small and full-precision at any streaming m.
+    fi = i.astype(jnp.float64)
+    ff = jnp.asarray(np.asarray(f.freqs, np.float64))   # exact below 2^53
+    if jnp.issubdtype(f.dtype, jnp.complexfloating):
+        phase = jax.vmap(lambda kk: jax.random.uniform(kk, ()))(keys)
+        d = jnp.exp((2j * jnp.pi) * phase.astype(jnp.float64))
+        frac = jnp.mod(fi[:, None] * ff[None, :], float(f.m)) / f.m
+        U = (d[:, None] * jnp.exp((2j * jnp.pi) * frac)) / np.sqrt(f.m)
+    else:
+        d = jax.vmap(lambda kk: jax.random.rademacher(kk, (), jnp.float64))(keys)
+        # cos(pi (i + 1/2) f / m) has period 4m in (2i+1) f
+        t = jnp.mod((2.0 * fi + 1.0)[:, None] * ff[None, :], 4.0 * f.m)
+        U = (d[:, None] * jnp.cos((jnp.pi / (2.0 * f.m)) * t)) * \
+            np.sqrt(2.0 / f.m)
+    rows = (U * jnp.asarray(f.sig)[None, :]) @ f.V.conj().T
+    return rows.astype(f.dtype)
+
+
 def spectrum_matrix(key: jax.Array, m: int, n: int, spectrum: str, k: int, *,
                     r: Optional[int] = None, dtype=jnp.float64,
                     floor: float = 1e-6) -> tuple[jax.Array, np.ndarray]:

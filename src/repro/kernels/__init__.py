@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
   sketch_matmul — tiled MXU GEMM for the Gaussian sketch Y = Omega A
+  sketch_accum  — accumulating sketch GEMM acc += Omega_c A_c with a
+                  CANONICAL fixed-block reduction order, so the streamed
+                  chunk-at-a-time sketch is bit-for-bit identical to the
+                  in-memory one (repro.stream's replay guarantee)
   srht          — blocked fast Walsh-Hadamard transform (TPU-native SRFT)
   cgs           — fused Gram-Schmidt block deflation Z - Q (Q^T Z), plus
                   the panel trailing update (Z - Q_p W, W = Q_p^T Z) of
@@ -24,10 +28,12 @@ from .cgs.ops import panel_deflate, project_out
 from .flash.ops import flash_attention
 from .panel_gram.ops import panel_gram
 from .panel_step.ops import panel_apply, panel_coeff, panel_step
+from .sketch_accum.ops import ACCUM_BLOCK, sketch_accum
 from .sketch_matmul.ops import sketch_matmul
 from .srht.ops import fwht as fwht_pallas, srht as srht_pallas
 from .tsolve.ops import tsolve
 
 __all__ = ["project_out", "panel_deflate", "panel_gram", "panel_step",
            "panel_coeff", "panel_apply", "flash_attention",
-           "sketch_matmul", "fwht_pallas", "srht_pallas", "tsolve"]
+           "sketch_matmul", "sketch_accum", "ACCUM_BLOCK",
+           "fwht_pallas", "srht_pallas", "tsolve"]

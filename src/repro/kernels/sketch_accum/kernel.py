@@ -1,0 +1,72 @@
+"""Accumulating sketch GEMM: ``acc + X @ A`` with a CANONICAL reduction
+order — the kernel the streaming RID's replay guarantee hangs on.
+
+The streamed sketch is ``Y = sum_c Phi_c A_c`` over row chunks of ``A``.
+Floating-point addition is not associative, so a naive per-chunk GEMM
+would make the sketch bits depend on ``chunk_rows`` — and break the
+bit-for-bit replay contract ``rid``'s docstring promises.  This kernel
+pins ONE association for every caller: the reduction over ``A``'s rows
+always proceeds in fixed ``ACCUM_BLOCK``-row blocks, sequentially, with
+one ``(l, B) x (B, n)`` MXU dot + one add per block.  Any partition of
+the rows at ``ACCUM_BLOCK`` multiples therefore replays the identical
+rounding sequence — streamed chunk-at-a-time or in one in-memory call.
+
+Blocking:
+
+  grid = (m/B,)   — 1-D, reduction-only: the ``l x n`` accumulator tile
+                    stays resident in VMEM across every step and is
+                    written back exactly once (the "one VMEM residency"
+                    of the streaming accumulate).
+
+VMEM per step: l*B + B*n + l*n(acc) floats — at the paper's sketch
+shapes (l = 2k ~ a few hundred, n a few thousand) comfortably inside
+the double-buffering budget; the m dimension never materializes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv
+
+# The canonical reduction block (rows of A per accumulate step).  This is
+# a REPLAY CONSTANT, not a tuning knob: streamed and in-memory sketches
+# are bit-for-bit identical only because both sides reduce in exactly
+# these blocks, so changing it changes every gaussian-sketch result.
+# 128 = the MXU lane width (full-throughput contraction on TPU).
+ACCUM_BLOCK = 128
+
+
+def _accum_kernel(x_ref, a_ref, acc_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _load():
+        o_ref[...] = acc_ref[...]
+
+    o_ref[...] += jnp.dot(x_ref[...], a_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def sketch_accum_kernel(x: jax.Array, a: jax.Array, acc: jax.Array, *,
+                        interpret: bool = True) -> jax.Array:
+    """Raw pallas_call.  Requires pre-padded shapes: ``ACCUM_BLOCK | m``;
+    ``x`` (l, m), ``a`` (m, n), ``acc`` (l, n) in the accumulator dtype."""
+    l, m = x.shape
+    m2, n = a.shape
+    assert m == m2 and acc.shape == (l, n), (x.shape, a.shape, acc.shape)
+    assert m % ACCUM_BLOCK == 0, (m, ACCUM_BLOCK)
+    grid = (cdiv(m, ACCUM_BLOCK),)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, ACCUM_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((ACCUM_BLOCK, n), lambda j: (j, 0)),
+            pl.BlockSpec((l, n), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, n), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, n), acc.dtype),
+        interpret=interpret,
+    )(x, a, acc)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the accumulating sketch GEMM — canonical order.
+
+The ref is not just a tolerance oracle: the complex production path runs
+THROUGH it (``ops.sketch_accum`` falls back here — TPU has no complex
+MXU path), so it must reduce in the same fixed ``ACCUM_BLOCK`` blocks as
+the kernel to keep complex streamed sketches chunk-size invariant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..common import acc_dtype_for, cdiv, pad_to
+from .kernel import ACCUM_BLOCK
+
+
+def accum_dtype_for(dtype) -> jnp.dtype:
+    """Accumulator dtype incl. complex: c64/c128 accumulate natively (the
+    complex path never touches the MXU); real follows ``acc_dtype_for``."""
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        return jnp.dtype(dtype)
+    return acc_dtype_for(dtype)
+
+
+def sketch_accum_ref(x: jax.Array, a: jax.Array, acc: jax.Array) -> jax.Array:
+    """``acc + x @ a`` reduced in canonical ``ACCUM_BLOCK`` row blocks:
+    one (l, B) x (B, n) dot + one add per block, sequentially."""
+    l, m = x.shape
+    n = a.shape[1]
+    nb = cdiv(m, ACCUM_BLOCK)
+    mp = nb * ACCUM_BLOCK
+    xb = pad_to(x, (l, mp)).reshape(l, nb, ACCUM_BLOCK).swapaxes(0, 1)
+    ab = pad_to(a, (mp, n)).reshape(nb, ACCUM_BLOCK, n)
+
+    def step(acc, blk):
+        xj, aj = blk
+        return acc + jnp.dot(xj, aj, preferred_element_type=acc.dtype), None
+
+    acc, _ = lax.scan(step, acc, (xb, ab))
+    return acc

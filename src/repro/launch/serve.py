@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--qr-impl", default="blocked",
                     choices=["cgs2", "blocked"],
                     help="pivoted-QR engine for the compression RSVD")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill long prompts in pieces of this many "
+                         "tokens, interleaved with decode steps "
+                         "(0 = one-shot prefill; attention-only archs)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -42,7 +46,8 @@ def main():
         print(compression_report(report))
 
     eng = ServeEngine(cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len)
+                      max_len=args.max_len,
+                      prefill_chunk_tokens=args.prefill_chunk or None)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

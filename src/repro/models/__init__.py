@@ -2,10 +2,11 @@
 from .config import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
 from .transformer import (decode_step, forward, init_caches, init_params,
                           loss_fn, params_shape, pattern, pattern_period,
-                          prefill)
+                          prefill, prefill_chunk, supports_chunked_prefill)
 
 __all__ = [
     "ModelConfig", "ATTN", "MAMBA", "MLSTM", "SLSTM",
     "init_params", "params_shape", "forward", "loss_fn",
-    "prefill", "decode_step", "init_caches", "pattern", "pattern_period",
+    "prefill", "prefill_chunk", "supports_chunked_prefill",
+    "decode_step", "init_caches", "pattern", "pattern_period",
 ]

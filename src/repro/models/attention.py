@@ -337,6 +337,40 @@ def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     return out @ p["wo"].astype(cfg.compute_dtype), KVCache(k=k, v=v)
 
 
+def attention_extend(p: dict, cfg: ModelConfig, x: jax.Array, pos0: jax.Array,
+                     cache: KVCache,
+                     cos: Optional[jax.Array], sin: Optional[jax.Array],
+                     ) -> tuple[jax.Array, KVCache]:
+    """One CHUNK of prefill against a partially-filled cache: ``x`` is
+    (B, S, d) at absolute positions ``[pos0, pos0 + S)``; the cache
+    already holds keys for ``[0, pos0)``.  The multi-query generalization
+    of ``attention_decode`` (S queries, causal within the chunk), which
+    is what lets ``ServeEngine`` prefill a long prompt in fixed-size
+    pieces interleaved with decode steps instead of stalling the batch.
+
+    No sliding-window support: the ring-buffer cache makes chunk slots
+    position-dependent; SWA archs keep the one-shot prefill.
+    """
+    B, S = x.shape[:2]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    k = lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), pos0, axis=1)
+    v = lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), pos0, axis=1)
+    L = k.shape[1]
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)      # (B,KV,G,S,L)
+    # Query i (absolute pos0 + i) sees keys at kpos <= pos0 + i; slots past
+    # the chunk are unwritten but masked by the same causal predicate.
+    mask = _mask_full(S, L, causal=True, window=None, q_offset=pos0)
+    scores = scores + mask[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(cfg.compute_dtype)
+    out = _gqa_out(w, v)
+    return out @ p["wo"].astype(cfg.compute_dtype), KVCache(k=k, v=v)
+
+
 def cross_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
                            enc_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
     """Decoder cross-attention against precomputed encoder K/V (whisper)."""

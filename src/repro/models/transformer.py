@@ -440,6 +440,67 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *, max_len: int,
     return logits, caches
 
 
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill needs every mixer to extend a positional cache
+    in place: attention-only stacks (any FFN/MoE), no encoder-decoder
+    frontend, no mrope, no sliding window (ring-buffer slots are
+    position-dependent).  Recurrent mixers (mamba/xlstm) expose only
+    full-sequence prefill + one-token decode, so they keep the one-shot
+    path."""
+    return (all(kind == ATTN for kind, _ in pattern(cfg))
+            and not cfg.encdec and not cfg.mrope
+            and cfg.sliding_window is None)
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array,
+                  pos0: jax.Array, caches: dict):
+    """One CHUNK of the prompt: process ``tokens`` (B, S) at absolute
+    positions ``[pos0, pos0 + S)`` against caches already filled for
+    ``[0, pos0)``, returning (last-chunk-token logits, extended caches).
+
+    Calling this over consecutive chunks is the incremental equivalent of
+    one ``prefill`` call — each chunk attends to every cached prefix key
+    plus itself (causally), so no prefix recompute — which is what lets
+    the serving engine slice a long prompt into pieces and run decode
+    steps for the rest of the batch in between (``ServeEngine``,
+    ``prefill_chunk_tokens``).  Only for ``supports_chunked_prefill``
+    configs.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"chunked prefill unsupported for arch "
+                         f"{cfg.name!r} (needs an attention-only stack, "
+                         f"no encdec/mrope/sliding window)")
+    B, S = tokens.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.broadcast_to(pos0 + jnp.arange(S, dtype=jnp.int32),
+                                 (B, S))
+    cos, sin = _rope_tables(cfg, positions)
+    pat = pattern(cfg)
+
+    def superblock(x, xs):
+        bps, selfc = xs
+        new_caches = []
+        for i, _sig in enumerate(pat):
+            bp = bps[i]
+            h = _norm(cfg, bp["ln1"], x)
+            h, cache = attn_mod.attention_extend(bp["mixer"], cfg, h, pos0,
+                                                 selfc[i], cos, sin)
+            x = x + h
+            if "moe" in bp:
+                h, _ = moe_ffn(bp["moe"], cfg, _norm(cfg, bp["ln2"], x))
+                x = x + h
+            elif "mlp" in bp:
+                x = x + mlp(bp["mlp"], cfg, _norm(cfg, bp["ln2"], x))
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    x, new_self = lax.scan(superblock, x, (params["blocks"], caches["self"]),
+                           unroll=cfg.unroll)
+    x_last = _norm(cfg, params["final_norm"], x[:, -1:])
+    return lm_logits(params, cfg, x_last), {"self": new_self}
+
+
 # ------------------------------------------------------------- decode step
 
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,

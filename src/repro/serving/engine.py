@@ -7,7 +7,12 @@ Design (vLLM-shaped, sized for the assignment's decode cells):
   * every decode step advances ALL active slots by one token (the
     ``decode_32k``/``long_500k`` cells lower exactly this step function);
   * finished slots (EOS or max_new_tokens) free immediately — continuous
-    batching, no head-of-line blocking.
+    batching, no head-of-line blocking;
+  * with ``prefill_chunk_tokens`` set, a LONG prompt is prefilled in
+    fixed-size pieces (``models.transformer.prefill_chunk`` — each piece
+    attends to the cached prefix, no recompute) with one decode step for
+    the rest of the batch between pieces, so a 10k-token arrival no
+    longer stalls every active slot for its whole prefill.
 
 The engine is deliberately synchronous/single-host here; the step
 functions it drives are the sharded ones from ``launch.steps``, so the
@@ -23,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.config import ModelConfig
-from ..models.transformer import decode_step, init_caches, prefill
+from ..models.transformer import (decode_step, init_caches, prefill,
+                                  prefill_chunk, supports_chunked_prefill)
 
 
 @dataclasses.dataclass
@@ -41,14 +47,29 @@ class ServeEngine:
     """Greedy decoding over a shared cache; one model, many requests."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 512):
+                 max_len: int = 512,
+                 prefill_chunk_tokens: Optional[int] = None):
+        if prefill_chunk_tokens is not None:
+            if prefill_chunk_tokens < 1:
+                raise ValueError(f"need prefill_chunk_tokens >= 1, got "
+                                 f"prefill_chunk_tokens="
+                                 f"{prefill_chunk_tokens}")
+            if not supports_chunked_prefill(cfg):
+                raise ValueError(
+                    f"chunked prefill unsupported for arch {cfg.name!r} "
+                    f"(needs an attention-only stack, no encdec/mrope/"
+                    f"sliding window); got prefill_chunk_tokens="
+                    f"{prefill_chunk_tokens}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self._queue: list[GenerationRequest] = []
         self._all: list[GenerationRequest] = []
         self._active: dict[int, GenerationRequest] = {}   # slot -> request
+        # slot -> in-flight chunked prefill: {"req", "consumed", "caches"}
+        self._prefilling: dict[int, dict] = {}
         self._pos = np.zeros(max_batch, dtype=np.int32)
         self._caches = init_caches(cfg, max_batch, max_len)
         self._last_tok = np.zeros((max_batch, 1), dtype=np.int32)
@@ -57,6 +78,8 @@ class ServeEngine:
             lambda p, t, pos, c: decode_step(p, cfg, t, pos, c))
         self._prefill_one = jax.jit(
             lambda p, t: prefill(p, cfg, t, max_len=max_len))
+        self._prefill_chunk = jax.jit(
+            lambda p, t, pos0, c: prefill_chunk(p, cfg, t, pos0, c))
 
     # ------------------------------------------------------------- intake
     def submit(self, req: GenerationRequest):
@@ -64,36 +87,75 @@ class ServeEngine:
         self._all.append(req)
 
     def _free_slots(self) -> list[int]:
-        return [s for s in range(self.max_batch) if s not in self._active]
+        return [s for s in range(self.max_batch)
+                if s not in self._active and s not in self._prefilling]
+
+    def _install(self, slot: int, req: GenerationRequest, caches1,
+                 first_tok: int) -> bool:
+        """Finish admission given the request's filled single-row caches
+        and first greedy token.  A request the first token already
+        completes (EOS, or ``max_new_tokens == 1``) is marked done and
+        never occupies a decode slot; returns whether the slot was
+        taken."""
+        req.output.append(first_tok)
+        if ((req.eos_token is not None and first_tok == req.eos_token)
+                or len(req.output) >= req.max_new_tokens):
+            req.done = True
+            return False
+        # Copy the single-sequence cache into this slot of the shared
+        # cache (leading dims: [pattern pos][n_super, batch, ...]).
+        self._caches = jax.tree.map(
+            lambda full, one: full.at[:, slot:slot + 1].set(
+                one.astype(full.dtype)),
+            self._caches, caches1)
+        self._active[slot] = req
+        self._pos[slot] = len(req.prompt)
+        self._last_tok[slot, 0] = first_tok
+        return True
 
     def _admit(self):
-        """Prefill waiting requests into free slots.
+        """Move waiting requests into free slots.
 
-        A request whose FIRST greedy token already completes it (EOS, or
-        ``max_new_tokens == 1``) is marked done here and never occupies a
-        decode slot — the slot stays free for the next queued request.
+        Short prompts prefill in one shot here (and a request whose FIRST
+        greedy token already completes it is done at admit, never
+        occupying a decode slot).  With ``prefill_chunk_tokens`` set,
+        longer prompts only RESERVE their slot here; their prompt is
+        consumed chunk-at-a-time by ``_step_prefill`` so decode steps for
+        the rest of the batch run in between.
         """
         free = self._free_slots()
         while free and self._queue:
             req = self._queue.pop(0)
+            chunk = self.prefill_chunk_tokens
+            if chunk is not None and len(req.prompt) > chunk:
+                slot = free.pop(0)
+                self._prefilling[slot] = {
+                    "req": req, "consumed": 0,
+                    "caches": init_caches(self.cfg, 1, self.max_len)}
+                continue
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, caches1 = self._prefill_one(self.params, toks)
             nxt = int(jnp.argmax(logits[0, -1]))
-            req.output.append(nxt)
-            if ((req.eos_token is not None and nxt == req.eos_token)
-                    or len(req.output) >= req.max_new_tokens):
-                req.done = True
-                continue
-            slot = free.pop(0)
-            # Copy the single-sequence cache into this slot of the shared
-            # cache (leading dims: [pattern pos][n_super, batch, ...]).
-            self._caches = jax.tree.map(
-                lambda full, one: full.at[:, slot:slot + 1].set(
-                    one.astype(full.dtype)),
-                self._caches, caches1)
-            self._active[slot] = req
-            self._pos[slot] = len(req.prompt)
-            self._last_tok[slot, 0] = nxt
+            slot = free[0]
+            if self._install(slot, req, caches1, nxt):
+                free.pop(0)
+
+    def _step_prefill(self):
+        """Advance every in-flight chunked prefill by ONE chunk (the
+        fixed work quantum that bounds how long the decode batch waits).
+        On the final chunk the request either completes at admit-time
+        semantics or joins the decode batch in its reserved slot."""
+        for slot, st in list(self._prefilling.items()):
+            req, consumed = st["req"], st["consumed"]
+            end = min(consumed + self.prefill_chunk_tokens, len(req.prompt))
+            toks = jnp.asarray(req.prompt[consumed:end], jnp.int32)[None, :]
+            logits, st["caches"] = self._prefill_chunk(
+                self.params, toks, consumed, st["caches"])
+            st["consumed"] = end
+            if end == len(req.prompt):
+                del self._prefilling[slot]
+                self._install(slot, req, st["caches"],
+                              int(jnp.argmax(logits[0, -1])))
 
     # -------------------------------------------------------------- decode
     def _step_decode(self):
@@ -118,10 +180,15 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- run
     def run(self, max_steps: int = 10_000) -> list[GenerationRequest]:
-        """Drive until every submitted request completes (or step budget)."""
+        """Drive until every submitted request completes (or step budget).
+        Each iteration: admit, ONE prefill chunk per in-flight long
+        prompt, ONE shared decode step — so chunked prefills and decode
+        interleave instead of serializing."""
         steps = 0
-        while (self._queue or self._active) and steps < max_steps:
+        while (self._queue or self._active or self._prefilling) \
+                and steps < max_steps:
             self._admit()
+            self._step_prefill()
             self._step_decode()
             steps += 1
         return [r for r in self._all if r.done]

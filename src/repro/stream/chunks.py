@@ -1,0 +1,111 @@
+"""Chunk sources: the host-side feeding half of the streaming RID.
+
+A :class:`ChunkSource` hands the pipeline one row chunk of ``A`` at a
+time — the ONLY way the streaming decomposition ever sees the matrix.
+Two implementations ship:
+
+  * ``ArraySource``    — slices a host-resident (numpy) array; the
+                         paper-shaped "matrix on the host, not in HBM"
+                         case.  Chunks are zero-copy row views.
+  * ``SpectrumSource`` — seeded generator over a KNOWN-spectrum matrix
+                         (``data.synthetic.spectrum_factors``): rows are
+                         evaluated in closed form per chunk, so the
+                         eq.(3) error tests scale ``m`` out-of-core with
+                         the exact ``sigma_{k+1}`` still in hand.
+
+Sources must be re-readable: the decomposition makes TWO passes (sketch
+accumulation, then the pivot-column gather ``B = A[:, J]``), so
+``chunk(c)`` may be called more than once and must return the same rows
+each time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.synthetic import SpectrumFactors, spectrum_factors, spectrum_rows
+
+__all__ = ["ChunkSource", "ArraySource", "SpectrumSource", "num_chunks",
+           "chunk_bounds"]
+
+
+@runtime_checkable
+class ChunkSource(Protocol):
+    """Row-chunked read access to an ``m x n`` matrix."""
+
+    shape: tuple[int, int]
+    dtype: jnp.dtype
+    chunk_rows: int
+
+    def chunk(self, c: int):
+        """Rows ``[c * chunk_rows, min((c + 1) * chunk_rows, m))`` as a
+        host (numpy) or device array.  Must be deterministic per ``c``."""
+        ...
+
+
+def num_chunks(source: ChunkSource) -> int:
+    m = source.shape[0]
+    return -(-m // source.chunk_rows)
+
+
+def chunk_bounds(source: ChunkSource, c: int) -> tuple[int, int]:
+    m = source.shape[0]
+    r0 = c * source.chunk_rows
+    return r0, min(r0 + source.chunk_rows, m)
+
+
+class ArraySource:
+    """Host-array slicer: ``A`` stays host-resident; each chunk is a
+    zero-copy row view that the pipeline transfers on demand."""
+
+    def __init__(self, A, chunk_rows: int):
+        A = np.asarray(A)
+        if A.ndim != 2:
+            raise ValueError(f"need a 2-D matrix, got shape {A.shape}")
+        if chunk_rows < 1:
+            raise ValueError(f"need chunk_rows >= 1, got "
+                             f"chunk_rows={chunk_rows}")
+        self._A = A
+        self.shape = A.shape
+        self.dtype = jnp.dtype(A.dtype)
+        self.chunk_rows = int(chunk_rows)
+
+    def chunk(self, c: int) -> np.ndarray:
+        r0, r1 = chunk_bounds(self, c)
+        return self._A[r0:r1]
+
+
+class SpectrumSource:
+    """Seeded generator source over a known-spectrum matrix.
+
+    ``sigmas`` carries the EXACT singular values (``sigmas[k]`` is the
+    eq.(3) reference ``sigma_{k+1}``); rows are generated per chunk and
+    never held all at once, so ``m`` can exceed device (and host)
+    memory.  Generation is closed-form per global row index — the same
+    matrix regardless of ``chunk_rows``.
+    """
+
+    def __init__(self, key: jax.Array, m: int, n: int, spectrum: str,
+                 k: int, *, chunk_rows: int, r: Optional[int] = None,
+                 dtype=jnp.float64, floor: float = 1e-6):
+        if chunk_rows < 1:
+            raise ValueError(f"need chunk_rows >= 1, got "
+                             f"chunk_rows={chunk_rows}")
+        self._factors: SpectrumFactors = spectrum_factors(
+            key, m, n, spectrum, k, r=r, dtype=dtype, floor=floor)
+        self.sigmas = np.asarray(self._factors.sig)
+        self.shape = (m, n)
+        self.dtype = jnp.dtype(dtype)
+        self.chunk_rows = int(chunk_rows)
+
+    def chunk(self, c: int) -> jax.Array:
+        r0, r1 = chunk_bounds(self, c)
+        return spectrum_rows(self._factors, r0, r1)
+
+    def materialize(self) -> np.ndarray:
+        """Concatenate every chunk — small-``m`` tests only."""
+        return np.concatenate([np.asarray(self.chunk(c))
+                               for c in range(num_chunks(self))])

@@ -1,0 +1,165 @@
+"""Out-of-core streaming RID: decompose matrices that never fit on device.
+
+Every other entry point (``rid``, ``rid_distributed``) needs the full
+``m x n`` matrix resident; this one needs a :class:`~repro.stream.chunks.
+ChunkSource` and keeps peak device residency at ``O(l n + chunk_rows n)``
+— independent of ``m``.  The sketch ``Y = Phi A`` is a one-pass row
+reduction (Halko-Martinsson-Tropp), so the pipeline feeds row chunks
+through the accumulating kernel while the NEXT chunk's host->device
+transfer is in flight, then hands the finished ``l x n`` sketch to the
+exact same QRCP + interpolation machinery the in-memory path uses.
+
+Memory / IO cost by phase (the ``distributed.py`` accounting, rebuilt
+for the host->device axis; ``C = ceil(m / chunk_rows)`` chunks):
+
+  phase             device bytes resident           H2D traffic
+  sketch (pass 1)   l n (accumulator)               m n   (each chunk
+                    + 2 chunk_rows n (double buf)          sent once)
+                    + l chunk_rows (operator slab)
+  pivoted QR        l n + engine panel state        0
+  interp solve      k n                             0
+  gather (pass 2)   one chunk                       m n -> m k result
+                                                    assembled on HOST
+
+The two-stream pass-1 schedule: the accumulate GEMM of chunk ``c`` is
+dispatched asynchronously, then the transfer of chunk ``c + 1`` is
+enqueued — on hardware with a DMA engine the copy overlaps the GEMM
+(``overlap=False`` serializes the two for benchmarking the gain;
+``benchmarks/bench_stream.py`` records the measured overlap efficiency).
+
+REPLAY GUARANTEE — ``rid_streamed`` is bit-for-bit identical to the
+in-memory ``rid`` for the same PRNG key.  Three pieces make that true:
+
+  1. the gaussian operator is seeded per canonical ``ACCUM_BLOCK``-row
+     block (``core.sketch.gaussian_omega_cols``), so chunked generation
+     reproduces exactly the in-memory operator values;
+  2. the row reduction runs through ``kernels/sketch_accum``, whose
+     fixed-block association makes the accumulated bits independent of
+     how the rows were partitioned — PROVIDED ``chunk_rows`` is a
+     multiple of ``ACCUM_BLOCK`` (validated below);
+  3. the QR + interpolation stages run through the same jit boundary as
+     ``rid_from_sketch`` (``core.rid._qr_interp``), and the pivot-column
+     gather copies values untouched.
+
+Only the ``gaussian`` sketch streams: srft/srht mix ALL ``m`` rows
+through an FFT/FWHT, so a row chunk cannot be sketched independently.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.rid import _cast_interp, _qr_interp
+from ..core.sketch import finalize_gaussian_sketch, gaussian_omega_cols
+from ..core.types import IDResult
+from ..kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
+from .chunks import ChunkSource, chunk_bounds, num_chunks
+
+__all__ = ["rid_streamed"]
+
+
+def _checked_chunk(source: ChunkSource, c: int):
+    """Fetch chunk ``c`` and validate its shape/dtype eagerly — a source
+    that lies about its geometry fails HERE with the chunk named, not
+    deep inside a jitted GEMM."""
+    r0, r1 = chunk_bounds(source, c)
+    ch = source.chunk(c)
+    n = source.shape[1]
+    if tuple(ch.shape) != (r1 - r0, n):
+        raise ValueError(f"source.chunk({c}) returned shape "
+                         f"{tuple(ch.shape)}, expected ({r1 - r0}, {n}) "
+                         f"for rows [{r0}, {r1}) of {source.shape}")
+    if jnp.dtype(ch.dtype) != jnp.dtype(source.dtype):
+        raise ValueError(f"source.chunk({c}) dtype {jnp.dtype(ch.dtype)} "
+                         f"disagrees with source.dtype "
+                         f"{jnp.dtype(source.dtype)}")
+    return ch
+
+
+def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
+                 l: Optional[int] = None, sketch_kind: str = "gaussian",
+                 qr_impl: str = "blocked", qr_panel: int = 32,
+                 qr_norm_recompute="auto", overlap: bool = True) -> IDResult:
+    """Rank-``k`` randomized ID of a chunk-fed matrix: ``A ~= B @ P``.
+
+    Bit-for-bit identical to ``rid(key, A, k, sketch_kind="gaussian",
+    ...)`` on the materialized matrix, for every ``chunk_rows`` that is a
+    multiple of ``ACCUM_BLOCK`` (module docstring) — same pivots, same
+    ``P``, same everything.
+
+    Args:
+      key: PRNG key driving the sketch operator (same semantics as
+        ``rid``).
+      source: a :class:`ChunkSource` feeding row chunks of ``A``; read
+        twice (sketch pass + pivot-column gather pass).
+      k: target rank (static).
+      l: sketch rows; defaults to the paper's universal ``l = 2k``.
+      sketch_kind: must be ``'gaussian'`` — the one backend whose
+        operator applies row-by-row (srft/srht need all of ``m``).
+      qr_impl / qr_panel / qr_norm_recompute: forwarded unchanged to the
+        QRCP engine (see ``rid``).
+      overlap: pipeline the next chunk's host->device transfer against
+        the current chunk's accumulate GEMM (default); ``False``
+        serializes them (benchmark baseline).
+
+    Returns an ``IDResult`` whose ``B`` (m x k pivot columns) is
+    assembled on the HOST (numpy) so device residency stays m-free;
+    ``P``/``J``/``Q``/``R`` are small device arrays.
+    """
+    if not isinstance(source, ChunkSource):    # runtime_checkable: all four
+        raise ValueError(f"source must implement the ChunkSource protocol "
+                         f"(shape/dtype/chunk_rows/chunk), got "
+                         f"{type(source).__name__}")
+    m, n = source.shape
+    chunk_rows = source.chunk_rows
+    dtype = jnp.dtype(source.dtype)
+    if sketch_kind != "gaussian":
+        raise ValueError(f"sketch kind {sketch_kind!r} cannot stream row "
+                         f"chunks (srft/srht mix ALL m rows through the "
+                         f"FFT/FWHT); pick 'gaussian'")
+    if chunk_rows < 1:
+        raise ValueError(f"need chunk_rows >= 1, got chunk_rows={chunk_rows}")
+    if chunk_rows < m and chunk_rows % ACCUM_BLOCK:
+        raise ValueError(
+            f"need chunk_rows a multiple of ACCUM_BLOCK={ACCUM_BLOCK} (the "
+            f"canonical reduction block that keeps the streamed sketch "
+            f"bit-for-bit identical to the in-memory one), got "
+            f"chunk_rows={chunk_rows}")
+    l = 2 * k if l is None else l
+    if l < k:
+        raise ValueError(f"need l >= k, got l={l} < k={k}")
+    if not (0 < k <= min(l, n)):
+        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, l={l}, n={n}")
+
+    # ---- pass 1: double-buffered sketch accumulation -------------------
+    C = num_chunks(source)
+    nxt = jax.device_put(_checked_chunk(source, 0))
+    acc = None
+    for c in range(C):
+        cur = nxt
+        r0, r1 = chunk_bounds(source, c)
+        omega_c = gaussian_omega_cols(key, r0, r1, l, dtype)
+        acc = sketch_accum(omega_c, cur, acc)     # async accumulate, chunk c
+        if not overlap:
+            jax.block_until_ready(acc)
+        if c + 1 < C:                             # H2D of c+1 rides the GEMM
+            nxt = jax.device_put(_checked_chunk(source, c + 1))
+    Y = finalize_gaussian_sketch(acc, l, dtype)
+
+    # ---- steps 2-3: identical jit boundary to the in-memory path -------
+    P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel, qr_norm_recompute)
+    P = _cast_interp(P, dtype)
+
+    # ---- pass 2: streamed pivot-column gather B = A[:, J] --------------
+    # Re-checked per chunk: a forward-only source that misbehaves on the
+    # RE-read (chunks must be re-readable — two passes) fails with the
+    # chunk named, not an opaque numpy broadcast error.
+    J = np.asarray(piv)
+    B = np.empty((m, k), dtype=dtype)
+    for c in range(C):
+        r0, r1 = chunk_bounds(source, c)
+        B[r0:r1] = np.asarray(_checked_chunk(source, c))[:, J]
+    return IDResult(B=B, P=P, J=piv, Q=Q, R=R)

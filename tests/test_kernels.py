@@ -72,6 +72,91 @@ def test_srht_full():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
+# -------------------------------------------------------------- sketch accum
+
+def _skip_without_x64(dtype):
+    """This module runs under the ambient x64 setting (no fixture): wide
+    dtypes silently truncate when x64 is off, so skip rather than test
+    the wrong precision.  (f64 streaming parity runs in test_stream.py,
+    which pins x64.)"""
+    if dtype in (jnp.float64, jnp.complex128) and not jax.config.jax_enable_x64:
+        pytest.skip("x64 disabled in this lane")
+
+
+@pytest.mark.parametrize("l,m,n", [(8, 128, 32), (64, 1000, 150),
+                                   (100, 777, 129), (17, 64, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_sketch_accum_sweep(l, m, n, dtype):
+    """Kernel vs the canonically-blocked oracle (identical association,
+    so the comparison is EXACT) and vs a plain dot (tolerance)."""
+    from repro.kernels.sketch_accum import sketch_accum
+    from repro.kernels.sketch_accum.ref import (accum_dtype_for,
+                                                sketch_accum_ref)
+    _skip_without_x64(dtype)
+    x = jax.random.normal(key(7), (l, m), dtype=dtype)
+    a = jax.random.normal(key(8), (m, n), dtype=dtype)
+    adt = accum_dtype_for(dtype)
+    acc0 = jax.random.normal(key(9), (l, n), dtype=adt)
+    got = sketch_accum(x, a, acc0)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(sketch_accum_ref(
+                                      x.astype(adt), a.astype(adt), acc0)))
+    want = acc0 + jnp.dot(x, a, preferred_element_type=adt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=(1e-4 if dtype == jnp.float32 else 1e-10)
+                               * np.sqrt(m))
+
+
+@pytest.mark.parametrize("dtype", [jnp.complex64, jnp.complex128])
+def test_sketch_accum_complex_ref_path(dtype):
+    from repro.kernels.sketch_accum import sketch_accum
+    _skip_without_x64(dtype)
+    rdt = jnp.float64 if dtype == jnp.complex128 else jnp.float32
+    x = (jax.random.normal(key(1), (16, 300), rdt)
+         + 1j * jax.random.normal(key(2), (16, 300), rdt)).astype(dtype)
+    a = (jax.random.normal(key(3), (300, 40), rdt)
+         + 1j * jax.random.normal(key(4), (300, 40), rdt)).astype(dtype)
+    got = sketch_accum(x, a)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ a),
+                               atol=(1e-3 if dtype == jnp.complex64
+                                     else 1e-10))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.complex64])
+def test_sketch_accum_chunk_invariance(dtype):
+    """The replay pin: canonical-multiple chunkings reproduce the one-shot
+    accumulation BIT FOR BIT (incl. an uneven final chunk)."""
+    from repro.kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
+    _skip_without_x64(dtype)
+    rdt = jnp.float64 if dtype == jnp.float64 else jnp.float32
+    m, l, n = 1000, 48, 70
+    x = jax.random.normal(key(5), (l, m), rdt)
+    a = jax.random.normal(key(6), (m, n), rdt)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        x = (x + 1j * jax.random.normal(key(7), (l, m), rdt)).astype(dtype)
+        a = (a + 1j * jax.random.normal(key(8), (m, n), rdt)).astype(dtype)
+    one = sketch_accum(x, a)
+    for chunk in (ACCUM_BLOCK, 3 * ACCUM_BLOCK):
+        acc = None
+        for r0 in range(0, m, chunk):
+            r1 = min(r0 + chunk, m)
+            acc = sketch_accum(x[:, r0:r1], a[r0:r1], acc)
+        np.testing.assert_array_equal(np.asarray(one), np.asarray(acc))
+
+
+def test_sketch_accum_validation():
+    from repro.kernels.sketch_accum import sketch_accum
+    x = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match=r"x columns \(8\) must match a "
+                                         r"rows \(16\)"):
+        sketch_accum(x, jnp.zeros((16, 3), jnp.float32))
+    with pytest.raises(ValueError, match=r"acc shape \(4, 5\) must be "
+                                         r"\(4, 3\)"):
+        sketch_accum(x, jnp.zeros((8, 3), jnp.float32),
+                     jnp.zeros((4, 5), jnp.float32))
+
+
 # ----------------------------------------------------------------- cgs block
 
 @pytest.mark.parametrize("l,k,n", [(16, 4, 30), (64, 16, 200), (128, 32, 513),

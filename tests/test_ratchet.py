@@ -1,0 +1,74 @@
+"""Bound-ratio ratchet (ISSUE 5 satellite): the comparison logic CI runs
+against the committed baseline, tested as pure functions."""
+import json
+
+import pytest
+
+from benchmarks.ratchet import check_ratchet, main, summary_ratios
+
+
+def _summary(impl, dtype, ratio):
+    return {"bench": "error_grid_summary", "impl": impl, "dtype": dtype,
+            "worst_ratio": ratio, "within_bound": ratio <= 1.0}
+
+
+BASE = [_summary("cgs2", "float32", 2e-4),
+        _summary("blocked", "float32", 4e-3),
+        {"bench": "error_grid", "impl": "cgs2", "ratio": 0.9}]  # ignored
+
+
+def test_summary_ratios_picks_summary_rows_last_wins():
+    rows = BASE + [_summary("cgs2", "float32", 3e-4)]
+    assert summary_ratios(rows) == {("cgs2", "float32"): 3e-4,
+                                    ("blocked", "float32"): 4e-3}
+
+
+def test_ratchet_passes_within_factor():
+    fresh = [_summary("cgs2", "float32", 3.9e-4),     # < 2x of 2e-4
+             _summary("blocked", "float32", 2e-3)]    # improved
+    assert check_ratchet(BASE, fresh) == []
+
+
+def test_ratchet_fails_on_2x_regression():
+    fresh = [_summary("cgs2", "float32", 2e-4),
+             _summary("blocked", "float32", 8.1e-3)]  # > 2x of 4e-3
+    problems = check_ratchet(BASE, fresh)
+    assert len(problems) == 1
+    assert "blocked/float32" in problems[0] and "8.100e-03" in problems[0]
+
+
+def test_ratchet_floor_absorbs_roundoff_scale_wiggle():
+    """Ratios below the floor may wiggle any amount — they measure
+    roundoff, not pivot quality."""
+    base = [_summary("cgs2", "float64", 1e-7)]
+    fresh = [_summary("cgs2", "float64", 9e-5)]       # 900x, still < floor*2
+    assert check_ratchet(base, fresh) == []
+    assert check_ratchet(base, [_summary("cgs2", "float64", 3e-4)]) != []
+
+
+def test_ratchet_flags_missing_cell_and_new_cells_pass():
+    fresh = [_summary("cgs2", "float32", 2e-4),
+             _summary("panel_parallel", "complex64", 5e-3)]   # new cell: ok
+    problems = check_ratchet(BASE, fresh)
+    assert len(problems) == 1 and "coverage loss" in problems[0]
+
+
+def test_ratchet_empty_fresh_record_fails():
+    assert check_ratchet(BASE, []) != []
+
+
+def test_ratchet_empty_baseline_fails():
+    """A summary-less baseline must fail loudly, not gate nothing forever."""
+    problems = check_ratchet([], [_summary("cgs2", "float32", 2e-4)])
+    assert len(problems) == 1 and "baseline" in problems[0]
+
+
+def test_ratchet_cli_roundtrip(tmp_path):
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(BASE))
+    f.write_text(json.dumps([_summary("cgs2", "float32", 2e-4),
+                             _summary("blocked", "float32", 4e-3)]))
+    assert main(["--baseline", str(b), "--fresh", str(f)]) == 0
+    f.write_text(json.dumps([_summary("cgs2", "float32", 1.0),
+                             _summary("blocked", "float32", 4e-3)]))
+    assert main(["--baseline", str(b), "--fresh", str(f)]) == 1

@@ -126,6 +126,95 @@ def test_engine_eos_stops(small_model):
     assert done[0].output[-1] == eos and len(done[0].output) <= 2
 
 
+# ------------------------------------------------------ chunked prefill
+
+@pytest.mark.slow
+def test_chunked_prefill_matches_one_shot(small_model):
+    """A long prompt prefilled in fixed-size pieces (ISSUE 5 satellite)
+    produces the same greedy continuation as the one-shot path: each
+    chunk attends to the cached prefix, so the final caches/logits are
+    the same computation re-associated."""
+    cfg, params = small_model
+    prompt = np.arange(37, dtype=np.int32) % cfg.vocab_size   # 37 = 4*8+5:
+    out = {}                                                  # uneven tail
+    for chunk in (None, 8):
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                          prefill_chunk_tokens=chunk)
+        eng.submit(GenerationRequest(request_id=0, prompt=prompt,
+                                     max_new_tokens=6))
+        done = eng.run()
+        assert len(done) == 1 and len(done[0].output) == 6
+        out[chunk] = done[0].output
+    assert out[8] == out[None]
+
+
+@pytest.mark.slow
+def test_chunked_prefill_interleaves_with_decode(small_model):
+    """The point of the satellite: while a long prompt is being chunk-
+    prefilled, the decode batch keeps advancing — the short request
+    gains a token on every engine iteration instead of stalling for the
+    whole prefill."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                      prefill_chunk_tokens=4)
+    short = GenerationRequest(request_id=0,
+                              prompt=np.arange(3, dtype=np.int32),
+                              max_new_tokens=20)   # 3 < chunk: one-shot admit
+    long_ = GenerationRequest(request_id=1,
+                              prompt=np.arange(40, dtype=np.int32) %
+                              cfg.vocab_size, max_new_tokens=3)
+    eng.submit(short)
+    eng._admit()                          # short goes active immediately
+    eng.submit(long_)
+    progress = []
+    for _ in range(6):                    # long needs 10 chunks of 4
+        eng._admit()
+        eng._step_prefill()
+        eng._step_decode()
+        progress.append(len(short.output))
+    # the long prompt reserved its slot and is still mid-prefill...
+    assert eng._prefilling and not long_.output
+    # ...while the short request decoded a token EVERY iteration
+    assert progress == list(range(2, 8))
+    done = eng.run()
+    assert {r.request_id for r in done} == {0, 1}
+    assert len(long_.output) == 3
+
+
+@pytest.mark.slow
+def test_chunked_prefill_admit_time_completion_frees_slot(small_model):
+    """Parity with the one-shot admit-time completion: a chunk-prefilled
+    request whose first token completes it (max_new_tokens == 1) never
+    joins the decode batch, and its reserved slot frees."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                      prefill_chunk_tokens=4)
+    req = GenerationRequest(request_id=0,
+                            prompt=np.arange(10, dtype=np.int32),
+                            max_new_tokens=1)
+    eng.submit(req)
+    done = eng.run()
+    assert [r.request_id for r in done] == [0]
+    assert req.done and len(req.output) == 1
+    assert eng._active == {} and eng._prefilling == {}
+    assert eng._free_slots() == [0]
+
+
+def test_chunked_prefill_validation_messages():
+    """Eager validation in the established argument-name + received-value
+    style, per message."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("granite_3_2b")
+    with pytest.raises(ValueError, match=r"need prefill_chunk_tokens >= 1, "
+                                         r"got prefill_chunk_tokens=0"):
+        ServeEngine(cfg, None, prefill_chunk_tokens=0)
+    mamba_cfg = get_smoke_config("jamba_v01_52b")
+    with pytest.raises(ValueError, match=r"chunked prefill unsupported for "
+                                         r"arch .*got "
+                                         r"prefill_chunk_tokens=8"):
+        ServeEngine(mamba_cfg, None, prefill_chunk_tokens=8)
+
+
 # ---------------------------------------------------------- RID weights
 
 def test_compress_params_factor_low_rank():

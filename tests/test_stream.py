@@ -1,0 +1,263 @@
+"""Streaming RID (ISSUE 5): bit-for-bit replay parity with the in-memory
+path, chunk sources, and the eager validation surface.
+
+The headline property: ``rid_streamed`` over ANY chunking whose
+``chunk_rows`` is a multiple of the canonical ``ACCUM_BLOCK`` reproduces
+``rid``'s output EXACTLY — same sketch bits, same pivots, same ``P`` —
+because operator seeding, reduction association, and the QR/interp jit
+boundary are all shared (see ``repro.stream.rid_stream``).  Equality
+below is ``np.array_equal``, never ``allclose``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import rid, rid_streamed
+from repro.core.sketch import gaussian_omega_cols, gaussian_sketch
+from repro.kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
+from repro.stream import (ArraySource, ChunkSource, SpectrumSource,
+                          chunk_bounds, num_chunks)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scope():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+DTYPES = {"float32": jnp.float32, "float64": jnp.float64,
+          "complex64": jnp.complex64}
+
+
+def _matrix(dtype, m=1000, n=180, k=72, seed=5, noise=0.01):
+    rdt = jnp.float64 if dtype == jnp.float64 else jnp.float32
+    kb, kp, kn, kc = jax.random.split(jax.random.key(seed), 4)
+    A = jax.random.normal(kb, (m, k), rdt) @ jax.random.normal(kp, (k, n), rdt)
+    A = A + noise * jax.random.normal(kn, (m, n), rdt)
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        A = A + 1j * jax.random.normal(kc, (m, n), rdt)
+    return A.astype(dtype)
+
+
+def _assert_identical(a, b):
+    for name in ("B", "P", "J", "Q", "R"):
+        x, y = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert x.dtype == y.dtype, (name, x.dtype, y.dtype)
+        assert np.array_equal(x, y), f"{name} differs (max |d| = " \
+            f"{np.max(np.abs(x - y))})"
+
+
+# ------------------------------------------------- bit-for-bit parity grid
+
+# chunk_rows cases: smaller than l (=144), a multi-block chunk with an
+# UNEVEN final chunk (1000 % 384 = 232), and a single covering chunk.
+CHUNKINGS = (ACCUM_BLOCK, 3 * ACCUM_BLOCK, 2048)
+
+
+@pytest.mark.parametrize("chunk_rows", CHUNKINGS)
+@pytest.mark.parametrize("dtype_name", sorted(DTYPES))
+def test_streamed_matches_rid_bit_for_bit(dtype_name, chunk_rows):
+    """The replay guarantee, per dtype x chunking: every IDResult field
+    EXACTLY equals the in-memory rid's for the same key."""
+    A = _matrix(DTYPES[dtype_name])
+    k = 72                                   # l = 144 > ACCUM_BLOCK, so the
+    ref = rid(jax.random.key(1), A, k, sketch_kind="gaussian")  # first case
+    assert CHUNKINGS[0] < 2 * k              # really exercises chunk_rows < l
+    dec = rid_streamed(jax.random.key(1), ArraySource(np.asarray(A),
+                                                      chunk_rows), k)
+    _assert_identical(ref, dec)
+
+
+def test_streamed_matches_rid_cgs2_and_serialized():
+    """Engine-independence of the guarantee: the cgs2 oracle QR and the
+    overlap=False (serialized-transfer) pipeline replay identically too."""
+    A = _matrix(jnp.float32, m=640, n=120, k=40)
+    ref = rid(jax.random.key(2), A, 40, sketch_kind="gaussian",
+              qr_impl="cgs2")
+    dec = rid_streamed(jax.random.key(2), ArraySource(np.asarray(A), 256),
+                       40, qr_impl="cgs2", overlap=False)
+    _assert_identical(ref, dec)
+
+
+def test_streamed_chunking_invariant_without_reference():
+    """Two different canonical chunkings agree with EACH OTHER (not just
+    with the in-memory path) — the associativity pin, directly."""
+    A = np.asarray(_matrix(jnp.float64, m=900, n=140, k=48))
+    a = rid_streamed(jax.random.key(3), ArraySource(A, 128), 48)
+    b = rid_streamed(jax.random.key(3), ArraySource(A, 512), 48)
+    _assert_identical(a, b)
+
+
+def test_omega_cols_match_in_memory_operator():
+    """Chunked operator generation reproduces the in-memory operator's
+    values exactly at any block-aligned offset."""
+    l, m = 96, 1000
+    for dt in (jnp.float32, jnp.complex64):
+        full = gaussian_omega_cols(jax.random.key(7), 0, m, l, dt)
+        for r0, r1 in ((0, 128), (384, 1000), (768, 801)):
+            part = gaussian_omega_cols(jax.random.key(7), r0, r1, l, dt)
+            assert np.array_equal(np.asarray(part),
+                                  np.asarray(full[:, r0:r1])), (dt, r0, r1)
+
+
+def test_sketch_accum_requires_canonical_alignment():
+    """The guarantee's precondition is real: a NON-block-multiple
+    chunking genuinely re-associates the reduction (so the validation
+    in rid_streamed is load-bearing, not ceremony)."""
+    x = jax.random.normal(jax.random.key(0), (64, 1000), jnp.float64)
+    a = jax.random.normal(jax.random.key(1), (1000, 90), jnp.float64)
+    one = sketch_accum(x, a)
+    acc = None
+    for r0 in range(0, 1000, 100):             # 100 % ACCUM_BLOCK != 0
+        acc = sketch_accum(x[:, r0:r0 + 100], a[r0:r0 + 100], acc)
+    assert not np.array_equal(np.asarray(one), np.asarray(acc))
+
+
+# ------------------------------------------------------------ chunk sources
+
+def test_array_source_protocol_and_views():
+    A = np.arange(20.0, dtype=np.float32).reshape(5, 4)
+    src = ArraySource(A, 2)
+    assert isinstance(src, ChunkSource)
+    assert num_chunks(src) == 3
+    assert chunk_bounds(src, 2) == (4, 5)
+    assert src.chunk(2).shape == (1, 4)         # uneven final chunk
+    np.testing.assert_array_equal(
+        np.concatenate([src.chunk(c) for c in range(3)]), A)
+    assert np.shares_memory(src.chunk(0), A)    # zero-copy row view
+
+
+@pytest.mark.parametrize("dtype_name", ["float64", "complex64"])
+def test_spectrum_source_exact_sigmas(dtype_name):
+    """The generator source's singular values are EXACT (the property the
+    streamed eq.(3) grid case relies on), and chunk concatenation is
+    invariant to chunk_rows."""
+    dtype = DTYPES[dtype_name]
+    src = SpectrumSource(jax.random.key(0), 700, 96, "cliff", 20,
+                         chunk_rows=256, dtype=dtype, floor=1e-10)
+    A = src.materialize()
+    assert A.shape == (700, 96) and A.dtype == np.dtype(dtype)
+    s = np.linalg.svd(np.asarray(A, np.complex128), compute_uv=False)
+    r = len(src.sigmas)
+    tol = 1e-12 if dtype_name == "float64" else 1e-6
+    np.testing.assert_allclose(s[:r], src.sigmas, atol=tol * src.sigmas[0])
+    other = SpectrumSource(jax.random.key(0), 700, 96, "cliff", 20,
+                           chunk_rows=128, dtype=dtype, floor=1e-10)
+    np.testing.assert_array_equal(other.materialize(), A)
+
+
+def test_spectrum_source_streams_through_rid():
+    """End to end on a generator source: rid_streamed equals rid on the
+    materialized matrix, bit for bit."""
+    src = SpectrumSource(jax.random.key(4), 640, 120, "fast_decay", 30,
+                         chunk_rows=128, dtype=jnp.float64, floor=1e-10)
+    dec = rid_streamed(jax.random.key(6), src, 30)
+    ref = rid(jax.random.key(6), jnp.asarray(src.materialize()), 30,
+              sketch_kind="gaussian")
+    _assert_identical(ref, dec)
+
+
+# ------------------------------------------------------- eager validation
+
+def _src(m=256, n=64, chunk=128, dtype=np.float32):
+    return ArraySource(np.zeros((m, n), dtype), chunk)
+
+
+def test_validation_chunk_rows_positive():
+    with pytest.raises(ValueError, match=r"need chunk_rows >= 1, got "
+                                         r"chunk_rows=0"):
+        ArraySource(np.zeros((4, 4), np.float32), 0)
+    with pytest.raises(ValueError, match=r"need chunk_rows >= 1, got "
+                                         r"chunk_rows=-3"):
+        SpectrumSource(jax.random.key(0), 64, 16, "cliff", 4, chunk_rows=-3)
+
+
+def test_validation_chunk_rows_canonical_multiple():
+    src = _src(chunk=100)
+    with pytest.raises(ValueError, match=r"multiple of ACCUM_BLOCK=128.*"
+                                         r"got chunk_rows=100"):
+        rid_streamed(jax.random.key(0), src, 8)
+    # single covering chunk is exempt (it IS the in-memory computation)
+    rid_streamed(jax.random.key(0), _src(m=100, chunk=100), 8)
+
+
+def test_validation_sketch_kind():
+    with pytest.raises(ValueError, match=r"sketch kind 'srft' cannot "
+                                         r"stream row chunks"):
+        rid_streamed(jax.random.key(0), _src(), 8, sketch_kind="srft")
+
+
+def test_validation_rank_and_oversampling():
+    with pytest.raises(ValueError, match=r"need l >= k, got l=4 < k=8"):
+        rid_streamed(jax.random.key(0), _src(), 8, l=4)
+    with pytest.raises(ValueError, match=r"need 0 < k <= min\(l, n\); "
+                                         r"got k=80, l=160, n=64"):
+        rid_streamed(jax.random.key(0), _src(), 80)
+
+
+def test_validation_source_protocol():
+    with pytest.raises(ValueError, match=r"must implement the ChunkSource "
+                                         r"protocol.*got ndarray"):
+        rid_streamed(jax.random.key(0), np.zeros((8, 8), np.float32), 2)
+
+    class NoDtype:                       # has 3 of the 4 protocol members
+        shape, chunk_rows = (8, 8), 8
+
+        def chunk(self, c):
+            return np.zeros((8, 8), np.float32)
+
+    with pytest.raises(ValueError, match=r"must implement the ChunkSource "
+                                         r"protocol.*got NoDtype"):
+        rid_streamed(jax.random.key(0), NoDtype(), 2)
+
+
+def test_spectrum_source_small_m_default_rank():
+    """The default r clamps to the DCT basis size (m - 1): small-m sources
+    construct without an explicit r."""
+    src = SpectrumSource(jax.random.key(0), 20, 64, "cliff", 10,
+                         chunk_rows=20, dtype=jnp.float64)
+    assert len(src.sigmas) == 19 and src.materialize().shape == (20, 64)
+
+
+def test_validation_source_geometry_lies():
+    class ShortSource(ArraySource):
+        def chunk(self, c):                     # drops a row of the last chunk
+            ch = super().chunk(c)
+            return ch[:-1] if c == num_chunks(self) - 1 else ch
+
+    class WrongDtype(ArraySource):
+        def chunk(self, c):
+            return np.asarray(super().chunk(c), np.float64)
+
+    with pytest.raises(ValueError, match=r"source\.chunk\(1\) returned "
+                                         r"shape \(127, 64\), expected "
+                                         r"\(128, 64\)"):
+        rid_streamed(jax.random.key(0), ShortSource(
+            np.zeros((256, 64), np.float32), 128), 8)
+    with pytest.raises(ValueError, match=r"source\.chunk\(0\) dtype float64 "
+                                         r"disagrees with source\.dtype "
+                                         r"float32"):
+        rid_streamed(jax.random.key(0), WrongDtype(
+            np.zeros((256, 64), np.float32), 128), 8)
+
+
+def test_gaussian_omega_requires_block_offset():
+    with pytest.raises(ValueError, match=r"multiple of ACCUM_BLOCK=128, "
+                                         r"got r0=64"):
+        gaussian_omega_cols(jax.random.key(0), 64, 256, 16, jnp.float32)
+
+
+# ----------------------------------------------------- gaussian entry point
+
+def test_gaussian_sketch_still_sane():
+    """The rewritten canonical gaussian_sketch keeps the operator's
+    statistics: a rank-k matrix sketches to a rank-k Y."""
+    A = _matrix(jnp.float64, m=500, n=150, k=12, noise=0.0)
+    Y = gaussian_sketch(jax.random.key(1), A, 24)
+    s = jnp.linalg.svd(Y, compute_uv=False)
+    assert float(s[11]) > 1e-6
+    assert float(s[12] / s[0]) < 1e-8

@@ -28,28 +28,11 @@ import time
 import jax
 import numpy as np
 
+from repro.analysis.residency import MeteredSource
 from repro.core import rid_streamed
-from repro.stream import ArraySource, ChunkSource
+from repro.stream import ArraySource
 
 from .common import append_json_rows, emit
-
-
-class MeteredSource:
-    """Wrap a ChunkSource; sample total live device bytes at every chunk
-    fetch — the hook runs between pipeline steps, exactly when both
-    chunk buffers and the sketch accumulator coexist."""
-
-    def __init__(self, inner: ChunkSource):
-        self._inner = inner
-        self.shape = inner.shape
-        self.dtype = inner.dtype
-        self.chunk_rows = inner.chunk_rows
-        self.peak_bytes = 0
-
-    def chunk(self, c: int):
-        live = sum(int(x.nbytes) for x in jax.live_arrays())
-        self.peak_bytes = max(self.peak_bytes, live)
-        return self._inner.chunk(c)
 
 
 def _walled(fn):

@@ -65,9 +65,36 @@ def main():
                                 "--weak", "--exec", "--qr-impl", impl, *js])
         if args.bench_json:
             print(f"\nwrote {args.bench_json}")
+    section("Static analysis: contract findings + measured kernel residency")
+    analysis_rows(args.bench_json)
     section("Roofline (from dry-run artifacts)")
     roofline.main([])
     print(f"\nbenchmarks completed in {time.time() - t0:.0f}s")
+
+
+def analysis_rows(bench_json: str):
+    """Run the repro.analysis passes and append their summary to the
+    bench record: the finding counts plus the kernel pass's MEASURED
+    residency/cost numbers (the same sampler the stream bench uses —
+    analysis/residency.py), so the static-contract trajectory rides the
+    same artifact as the perf trajectory."""
+    from repro.analysis.runner import run_all
+
+    from .common import append_json_rows, emit
+
+    report = run_all()
+    summary = [{"bench": "analysis",
+                "subjects": sum(len(s) for s in report.subjects.values()),
+                "findings": len(report.findings),
+                "errors": len(report.errors())}]
+    residency = [{"bench": "analysis_residency", "package": f.subject,
+                  "detail": f.message}
+                 for f in report.findings if f.rule == "kernels.residency"]
+    emit(summary, "repro.analysis summary")
+    if residency:
+        emit(residency, "measured kernel residency (info findings)")
+    if bench_json:
+        append_json_rows(bench_json, summary + residency)
 
 
 if __name__ == "__main__":

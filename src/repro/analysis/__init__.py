@@ -1,0 +1,21 @@
+"""repro.analysis: the repo's performance invariants as CI-enforced
+static contracts.
+
+Three passes (see README.md in this directory for the rule catalog):
+
+  * :mod:`.jaxpr`    — dataflow rules over traced entry points
+                       (collective overlap, replication blowups, dtype
+                       leaks, host transfers);
+  * :mod:`.kernels`  — Pallas kernel package contracts (exports,
+                       ops/ref signature coupling, pinned constants,
+                       eager validation, static VMEM residency);
+  * :mod:`.lint`     — AST conventions over ``src/repro``.
+
+Entry points self-register via :mod:`.registry`; run everything with
+``python -m repro.analysis`` (see :mod:`.__main__`).  This package
+import stays light — the heavy passes import lazily.
+"""
+from .registry import EntryPoint, OverlapSpec, register  # noqa: F401
+from .report import Finding, Report                      # noqa: F401
+
+__all__ = ["EntryPoint", "OverlapSpec", "register", "Finding", "Report"]

@@ -1,0 +1,71 @@
+"""CLI: ``python -m repro.analysis`` — run every pass, write the JSON
+report, diff against the suppression baseline.
+
+Exit status (with ``--fail-on-new``, the CI mode): nonzero iff an
+error-severity finding is NOT in the baseline.  Fixed findings leave
+stale baseline entries behind; those are listed so the baseline only
+ratchets toward empty (``--update-baseline`` rewrites it from the
+current run — review the diff before committing it).
+
+NOTE deliberately NO ``jax.config`` mutation here (our own lint rule):
+run under ``JAX_ENABLE_X64=1`` for the dtype rules to see the f64 world,
+as the CI job does.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .report import (BASELINE_PATH, diff_against_baseline, load_baseline,
+                     save_baseline)
+from .runner import run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: jaxpr contracts, kernel contracts, "
+                    "AST lint, positive controls")
+    ap.add_argument("--report", default="ANALYSIS_report.json",
+                    help="where to write the JSON report")
+    ap.add_argument("--baseline", default=str(BASELINE_PATH),
+                    help="suppression baseline (checked in)")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit nonzero on findings missing from the "
+                         "baseline (the CI gate)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from this run's findings")
+    ap.add_argument("--no-controls", action="store_true",
+                    help="skip the planted-bug control pass")
+    args = ap.parse_args(argv)
+
+    report = run_all(controls=not args.no_controls)
+    report.write(args.report)
+
+    baseline = load_baseline(args.baseline)
+    new, suppressed, stale = diff_against_baseline(report, baseline)
+
+    for name in report.passes_run:
+        print(f"pass {name}: {len(report.subjects.get(name, []))} subjects")
+    print(f"findings: {len(report.findings)} total, "
+          f"{len(report.errors())} errors "
+          f"({len(suppressed)} baselined, {len(new)} new)")
+    for f in new:
+        print(f"  NEW [{f.rule}] {f.subject} :: {f.key}\n"
+              f"      {f.message}")
+    for e in stale:
+        print(f"  stale suppression: [{e['rule']}] {e['subject']} :: "
+              f"{e['key']} (fixed? prune it from the baseline)")
+    if args.update_baseline:
+        save_baseline(report.errors(), args.baseline)
+        print(f"baseline rewritten: {args.baseline} "
+              f"({len(report.errors())} suppressions)")
+        return 0
+    if args.fail_on_new and new:
+        print(f"FAIL: {len(new)} new finding(s) not in baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

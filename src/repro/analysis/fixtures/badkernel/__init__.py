@@ -1,0 +1,4 @@
+"""Deliberately-broken kernel package: its contract example declares
+BlockSpecs whose per-grid-step residency blows the VMEM budget.  The
+contract checker must flag it (``kernels.vmem-overflow``) — the
+runner's kernel-side positive control."""

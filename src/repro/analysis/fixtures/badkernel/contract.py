@@ -1,0 +1,26 @@
+"""Contract of the broken fixture kernel: a 4096 x 4096 f32 example
+whose input block is the whole 64 MiB operand — far over the 8 MiB
+budget.  ``kernels.check_package`` must emit ``kernels.vmem-overflow``
+here, proving the estimator is not vacuous."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ....kernels.common import KernelContract
+
+
+def _example():
+    from .ops import big_copy
+    x = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
+    return big_copy, (x,), {}
+
+
+CONTRACT = KernelContract(
+    name="badkernel",
+    ops=("big_copy",),
+    kernels=("big_copy_kernel",),
+    refs=("big_copy_ref",),
+    pairs=(("big_copy", "big_copy_ref"),),
+    example=_example,
+)

@@ -1,0 +1,26 @@
+"""A copy kernel with VMEM-hostile blocking: the input block is the
+whole 64 MiB operand on every grid step (never executed for real — the
+contract checker only traces it under the pallas capture)."""
+from __future__ import annotations
+
+import jax
+from jax.experimental import pallas as pl
+
+from ....kernels.common import cdiv
+
+
+def _copy(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def big_copy_kernel(x: jax.Array, *, bn: int = 2048,
+                    interpret: bool = True) -> jax.Array:
+    m, n = x.shape
+    return pl.pallas_call(
+        _copy,
+        grid=(cdiv(n, bn),),
+        in_specs=[pl.BlockSpec((m, n), lambda j: (0, 0))],   # whole operand,
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),   # every step
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the broken fixture kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import big_copy_kernel
+
+__all__ = ["big_copy"]
+
+
+@partial(jax.jit, static_argnames=("bn", "interpret"))
+def big_copy(x: jax.Array, *, bn: int = 2048,
+             interpret: bool = True) -> jax.Array:
+    return big_copy_kernel(x, bn=bn, interpret=interpret)

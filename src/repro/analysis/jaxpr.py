@@ -1,0 +1,322 @@
+"""Jaxpr dataflow analysis: dependency cones + the communication rules.
+
+The engine generalizes the inline checker that used to live in
+``tests/test_qr_dist.py::test_norm_psum_overlaps_deflation``: walk a
+traced jaxpr recursively (through pjit / shard_map / scan / cond
+sub-jaxprs), build per-equation transitive producer cones, and evaluate
+rules against the declared contracts (:mod:`repro.analysis.registry`):
+
+  ``jaxpr.collective-overlap``   a pivot-norm psum consumes the SAME
+                                 panel's trailing-update output — the
+                                 all-reduce serializes behind the GEMM it
+                                 was designed to hide under.
+  ``jaxpr.control-failed``       the analyzer could not locate the
+                                 structures a contract names, or a
+                                 positive control (gram serialization,
+                                 previous-panel dependency) did not fire
+                                 — the check is vacuous, which gates CI
+                                 exactly like a violation.
+  ``jaxpr.replicated-collective``a collective materializes an output
+                                 larger than the entry's declared budget
+                                 (the l x n replication hazard).
+  ``jaxpr.dtype-promotion``      64-bit values appear in an entry traced
+                                 from <=32-bit inputs, or a complex value
+                                 is convert_element_type'd to real (the
+                                 imaginary part silently dropped).
+  ``jaxpr.host-transfer``        device_put / callbacks / infeed inside
+                                 traced code — a host sync on the hot
+                                 path.
+
+Cones are conservative: an equation depends on every equation defining
+one of its inputs, including everything captured by sub-jaxpr operands —
+so "X not in cone(Y)" is a PROOF of data-independence at trace level,
+while "X in cone(Y)" may be refined by XLA.  The rules are phrased so
+the conservative direction is the safe one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from .registry import EntryPoint, OverlapSpec
+from .report import Finding
+
+__all__ = ["TracedEntry", "trace_entry", "sub_jaxprs", "iter_eqns",
+           "shard_map_body", "dependency_cones", "analyze_entry",
+           "check_collective_overlap", "check_replicated_collective",
+           "check_dtype_promotion", "check_host_transfer"]
+
+
+# --------------------------------------------------------------- traversal
+
+def sub_jaxprs(eqn):
+    """Yield every inner jaxpr of ``eqn`` (pjit/shard_map ClosedJaxpr
+    params, scan body Jaxprs, cond branch tuples)."""
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            if hasattr(x, "jaxpr"):          # ClosedJaxpr
+                yield x.jaxpr
+            elif hasattr(x, "eqns"):         # raw Jaxpr
+                yield x
+
+
+def iter_eqns(jaxpr):
+    """All equations of ``jaxpr``, recursively, outermost first."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def shard_map_body(jaxpr):
+    """The innermost ``shard_map`` body jaxpr under ``jaxpr`` (the
+    per-device program whose collectives the overlap rule reasons
+    about), or ``None`` if the trace contains no shard_map."""
+    found = None
+    for eqn in iter_eqns(jaxpr):
+        if "shard_map" in eqn.primitive.name:
+            for sub in sub_jaxprs(eqn):
+                inner = shard_map_body(sub)
+                found = inner if inner is not None else sub
+    return found
+
+
+def dependency_cones(eqns):
+    """``cones[i]`` = set of equation indices the ``i``-th equation
+    transitively depends on (the test-file algorithm, verbatim:
+    producer map over outvar identity, union of input cones)."""
+    producers, cones = {}, []
+    for i, e in enumerate(eqns):
+        cone = set()
+        for v in e.invars:
+            j = producers.get(id(v))
+            if j is not None:
+                cone |= {j} | cones[j]
+        cones.append(cone)
+        for v in e.outvars:
+            producers[id(v)] = i
+    return cones
+
+
+# ----------------------------------------------------------------- tracing
+
+@dataclass(frozen=True)
+class TracedEntry:
+    """An entry point plus its trace: the ClosedJaxpr and the input avals
+    the rules condition on."""
+    entry: EntryPoint
+    closed: object          # jax.core.ClosedJaxpr
+    in_avals: tuple
+
+    @property
+    def name(self):
+        return self.entry.name
+
+
+def trace_entry(entry: EntryPoint) -> TracedEntry:
+    fn, args = entry.build()
+    closed = jax.make_jaxpr(fn)(*args)
+    return TracedEntry(entry=entry, closed=closed,
+                       in_avals=tuple(closed.in_avals))
+
+
+# ------------------------------------------------------------------- rules
+
+def _is_deflation(eqn, spec: OverlapSpec) -> bool:
+    if spec.deflate == "panel_apply":
+        # stage B: the jitted panel_apply kernel call (a pjit eqn wrapping
+        # the pallas_call) or, if inlined, the raw kernel itself.
+        return ("panel_apply" in str(eqn.params.get("name", "")) or
+                (eqn.primitive.name == "pallas_call" and "apply" in
+                 str(eqn.params.get("name_and_src_info", ""))))
+    if spec.deflate == "sub":
+        if eqn.primitive.name != "sub":
+            return False
+        shape = tuple(eqn.outvars[0].aval.shape)
+        want = tuple(spec.deflate_shape)
+        # -1 is a wildcard dim: the sharded width depends on the device
+        # count the entry was built with, which registration can't know.
+        return len(shape) == len(want) and all(
+            w == -1 or s == w for s, w in zip(shape, want))
+    raise ValueError(f"unknown deflate matcher {spec.deflate!r}; expected "
+                     f"'panel_apply' or 'sub'")
+
+
+def check_collective_overlap(traced: TracedEntry) -> list:
+    """The double-buffered-collectives rule (module docstring)."""
+    spec = traced.entry.overlap
+    if spec is None:
+        return []
+    name = traced.name
+    body = shard_map_body(traced.closed.jaxpr)
+    if body is None:
+        return [Finding("jaxpr.control-failed", name, "no-shard-map-body",
+                        "entry declares an OverlapSpec but its trace "
+                        "contains no shard_map body to analyze")]
+    eqns = list(body.eqns)
+    cones = dependency_cones(eqns)
+    psums = [i for i, e in enumerate(eqns)
+             if "psum" in e.primitive.name
+             and tuple(e.outvars[0].aval.shape) == tuple(spec.norm_shape)]
+    defls = [i for i, e in enumerate(eqns) if _is_deflation(e, spec)]
+    if len(defls) < spec.min_panels or len(psums) < spec.min_panels + 1:
+        return [Finding(
+            "jaxpr.control-failed", name, "structures-not-found",
+            f"matched {len(psums)} norm psums (shape {spec.norm_shape}) "
+            f"and {len(defls)} deflations (matcher {spec.deflate!r}); "
+            f"need >= {spec.min_panels + 1} and >= {spec.min_panels} — "
+            f"the overlap check would be vacuous")]
+
+    findings = []
+    if spec.expect_overlap:
+        # psums[0] is the prologue reduce; psums[p+1] selects panel p+1's
+        # pivots and must not consume panel p's deflation output.
+        for p in range(min(len(defls), len(psums) - 1)):
+            if defls[p] in cones[psums[p + 1]]:
+                findings.append(Finding(
+                    "jaxpr.collective-overlap", name, f"panel-{p}",
+                    f"the norm psum selecting panel {p + 1}'s pivots "
+                    f"(eqn {psums[p + 1]}) depends on panel {p}'s "
+                    f"deflation (eqn {defls[p]}): the all-reduce "
+                    f"serializes behind the trailing-update GEMM"))
+        # Positive control: panel 1's psum must still see panel 0's
+        # deflation THROUGH stage A — otherwise the cone is broken and
+        # the pass above proved nothing.
+        if len(psums) > 2 and defls[0] not in cones[psums[2]]:
+            findings.append(Finding(
+                "jaxpr.control-failed", name, "cone-positive-control",
+                "panel 0's deflation is absent even from panel 2's pivot "
+                "psum cone — the dependency cone is not tracking real "
+                "dataflow, so the overlap result is unreliable"))
+    else:
+        # Serialized-by-design oracle: the analyzer must DETECT the
+        # serialization, or it cannot be trusted to flag regressions.
+        if defls[0] not in cones[psums[1]]:
+            findings.append(Finding(
+                "jaxpr.control-failed", name, "serialization-not-detected",
+                "entry is declared serialized (expect_overlap=False) but "
+                "the first norm psum does not depend on the first "
+                "deflation — the analyzer failed its positive control"))
+    return findings
+
+
+def check_replicated_collective(traced: TracedEntry) -> list:
+    """Flag collectives materializing outputs above the entry's declared
+    element budget (the l x n replication hazard)."""
+    budget = traced.entry.max_collective_elems
+    if budget is None:
+        return []
+    import numpy as np
+    findings = []
+    hits = set()
+    for eqn in iter_eqns(traced.closed.jaxpr):
+        pname = eqn.primitive.name
+        if not ("all_gather" in pname or "psum" in pname
+                or "all_to_all" in pname):
+            continue
+        for ov in eqn.outvars:
+            elems = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
+            if elems > budget:
+                key = f"{pname}-{'x'.join(map(str, ov.aval.shape))}"
+                if key in hits:
+                    continue
+                hits.add(key)
+                findings.append(Finding(
+                    "jaxpr.replicated-collective", traced.name, key,
+                    f"{pname} materializes shape {tuple(ov.aval.shape)} "
+                    f"({elems} elems) per device, over the entry's "
+                    f"declared budget of {budget} elems"))
+    return findings
+
+
+def _itemsize(aval) -> int:
+    try:
+        return int(jax.numpy.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0
+
+
+def check_dtype_promotion(traced: TracedEntry) -> list:
+    """64-bit leaks in a <=32-bit entry; complex values truncated to real
+    via convert_element_type (imaginary part silently dropped)."""
+    import jax.numpy as jnp
+    findings = []
+    inputs_32 = all(_itemsize(a) <= 4 for a in traced.in_avals
+                    if hasattr(a, "dtype"))
+    hits = set()
+    for eqn in iter_eqns(traced.closed.jaxpr):
+        for ov in eqn.outvars:
+            aval = ov.aval
+            if not hasattr(aval, "dtype"):
+                continue
+            # 64-bit-per-component floats: f64 (itemsize 8, non-complex)
+            # and c128 (itemsize 16).  c64 is 32-bit components — fine.
+            wide = (jnp.issubdtype(aval.dtype, jnp.floating) and
+                    _itemsize(aval) == 8) or \
+                   (jnp.issubdtype(aval.dtype, jnp.complexfloating) and
+                    _itemsize(aval) == 16)
+            if inputs_32 and wide:
+                key = f"wide-{eqn.primitive.name}-{aval.dtype}"
+                if key not in hits:
+                    hits.add(key)
+                    findings.append(Finding(
+                        "jaxpr.dtype-promotion", traced.name, key,
+                        f"{eqn.primitive.name} produces {aval.dtype} "
+                        f"(shape {tuple(aval.shape)}) in an entry traced "
+                        f"from <=32-bit inputs — a silent f64 upcast "
+                        f"doubles bytes and runs off the MXU"))
+        if eqn.primitive.name == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+            if hasattr(src, "dtype") and \
+                    jnp.issubdtype(src.dtype, jnp.complexfloating) and \
+                    not jnp.issubdtype(dst.dtype, jnp.complexfloating):
+                key = f"complex-truncation-{src.dtype}-to-{dst.dtype}"
+                if key not in hits:
+                    hits.add(key)
+                    findings.append(Finding(
+                        "jaxpr.dtype-promotion", traced.name, key,
+                        f"convert_element_type drops the imaginary part "
+                        f"({src.dtype} -> {dst.dtype}); use .real "
+                        f"explicitly if the truncation is intended"))
+    return findings
+
+
+# Primitives that force host<->device synchronization when they appear
+# inside traced library code.
+_HOST_PRIMS = ("device_put", "infeed", "outfeed")
+
+
+def check_host_transfer(traced: TracedEntry) -> list:
+    findings = []
+    hits = set()
+    for eqn in iter_eqns(traced.closed.jaxpr):
+        pname = eqn.primitive.name
+        if pname in _HOST_PRIMS or "callback" in pname:
+            if pname in hits:
+                continue
+            hits.add(pname)
+            findings.append(Finding(
+                "jaxpr.host-transfer", traced.name, pname,
+                f"traced program contains {pname!r} — a host transfer / "
+                f"callback on the device hot path"))
+    return findings
+
+
+ENTRY_RULES = (check_collective_overlap, check_replicated_collective,
+               check_dtype_promotion, check_host_transfer)
+
+
+def analyze_entry(entry: EntryPoint) -> list:
+    """Trace one registered entry and run every jaxpr rule against it."""
+    try:
+        traced = trace_entry(entry)
+    except Exception as e:      # a contract that cannot even trace gates CI
+        return [Finding("jaxpr.control-failed", entry.name, "trace-error",
+                        f"entry failed to trace: {type(e).__name__}: {e}")]
+    findings = []
+    for rule in ENTRY_RULES:
+        findings.extend(rule(traced))
+    return findings

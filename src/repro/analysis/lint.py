@@ -1,0 +1,204 @@
+"""AST convention lint (``lint.*`` rules) over ``src/repro``.
+
+The conventions are the repo's own (DESIGN/ROADMAP), turned into checks:
+
+  ``lint.valueerror-no-value``    ``raise ValueError(...)`` whose message
+                                  interpolates NO value (no f-string
+                                  field): the error cannot name the
+                                  argument or the offending value.
+  ``lint.jax-config-mutation``    ``jax.config.update(...)`` / attribute
+                                  assignment in library code — global
+                                  state that silently changes every
+                                  caller's dtypes.
+  ``lint.global-clock-prng``      wall-clock calls (``time.time()`` et
+                                  al.) or global PRNG (``random.*``,
+                                  ``np.random.*``) in library code;
+                                  randomness flows through explicit jax
+                                  keys, clocks are injected (see
+                                  ``runtime.coordinator``'s ``clock``
+                                  parameter for the sanctioned pattern).
+  ``lint.string-switch``          an if/elif chain comparing one variable
+                                  against >= 3 string literals — dispatch
+                                  tables (``core.sketch._BACKENDS``) are
+                                  the convention.
+  ``lint.duplicate-validation``   a re-inlined copy of the canonical
+                                  rank/panel bound messages outside
+                                  ``core/validate.py`` — shared
+                                  validation must go through it.
+
+Scope: the ValueError and duplicate-validation rules run on ALL of
+``src/repro``; the behavioral rules (config/clock/switch) run on the
+LIBRARY dirs only — ``launch/`` scripts legitimately time things and
+translate rule tables.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .report import Finding
+
+__all__ = ["lint_file", "lint_tree", "LIBRARY_DIRS"]
+
+LIBRARY_DIRS = ("core", "kernels", "stream", "models", "serving",
+                "checkpoint", "optim", "data", "runtime", "analysis")
+
+# The canonical shared-validation message prefixes (core/validate.py);
+# their reappearance elsewhere is a copy-paste of the helpers.
+_CANON_VALIDATION = ("need 0 < k <= min(l, n)", "need l >= k")
+
+_CLOCK_CALLS = {("time", "time"), ("time", "monotonic"),
+                ("time", "perf_counter"), ("time", "process_time")}
+
+
+def _attr_chain(node):
+    """('np', 'random', 'default_rng') for np.random.default_rng, else ()."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _is_library(rel: Path) -> bool:
+    return len(rel.parts) > 1 and rel.parts[0] in LIBRARY_DIRS
+
+
+def _string_switch_runs(tree):
+    """Yield (lineno, var, n) for if/elif chains comparing one Name
+    against n >= 3 distinct string literals."""
+    chained = set()          # elif nodes already counted in a parent chain
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.If) or id(node) in chained:
+            continue
+        n, cur, var = 0, node, None
+        while isinstance(cur, ast.If):
+            t = cur.test
+            if (isinstance(t, ast.Compare) and isinstance(t.left, ast.Name)
+                    and len(t.ops) == 1 and isinstance(t.ops[0], ast.Eq)
+                    and isinstance(t.comparators[0], ast.Constant)
+                    and isinstance(t.comparators[0].value, str)
+                    and var in (None, t.left.id)):
+                var = t.left.id
+                n += 1
+            else:
+                break
+            nxt = cur.orelse[0] if (len(cur.orelse) == 1 and
+                                    isinstance(cur.orelse[0], ast.If)) \
+                else None
+            if nxt is not None:
+                chained.add(id(nxt))
+            cur = nxt
+        if n >= 3:
+            yield node.lineno, var, n
+
+
+def lint_file(path, rel: Path) -> list:
+    """All lint findings for one file; ``rel`` is the path relative to
+    ``src/repro`` (the finding subject and the scoping key)."""
+    src = Path(path).read_text()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("lint.parse-error", str(rel), "syntax",
+                        f"file does not parse: {e}")]
+    findings = []
+    subject = str(rel)
+    in_library = _is_library(rel)
+    is_validate = rel.parts[-2:] == ("core", "validate.py")
+
+    for node in ast.walk(tree):
+        # -- ValueError without an interpolated value ------------------
+        if (isinstance(node, ast.Raise) and isinstance(node.exc, ast.Call)
+                and isinstance(node.exc.func, ast.Name)
+                and node.exc.func.id == "ValueError"):
+            interpolated = any(isinstance(sub, ast.FormattedValue)
+                               for a in node.exc.args for sub in ast.walk(a))
+            if not interpolated:
+                findings.append(Finding(
+                    "lint.valueerror-no-value", subject,
+                    f"raise-{_raise_key(node)}",
+                    f"line {node.lineno}: raise ValueError(...) without an "
+                    f"interpolated value — the message must name the "
+                    f"argument and the value it got"))
+            elif not is_validate:
+                msg_text = "".join(
+                    sub.value for a in node.exc.args
+                    for sub in ast.walk(a)
+                    if isinstance(sub, ast.Constant)
+                    and isinstance(sub.value, str))
+                for canon in _CANON_VALIDATION:
+                    if canon in msg_text:
+                        findings.append(Finding(
+                            "lint.duplicate-validation", subject, canon,
+                            f"line {node.lineno}: re-inlines the canonical "
+                            f"message {canon!r} — call the core/validate.py "
+                            f"helper instead"))
+
+        if not in_library:
+            continue
+
+        # -- jax.config mutation ---------------------------------------
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain[:3] == ("jax", "config", "update"):
+                findings.append(Finding(
+                    "lint.jax-config-mutation", subject, "update",
+                    f"line {node.lineno}: jax.config.update in library "
+                    f"code mutates process-global dtype/runtime state"))
+            # -- global clock / PRNG -----------------------------------
+            if chain[:2] in _CLOCK_CALLS:
+                findings.append(Finding(
+                    "lint.global-clock-prng", subject,
+                    f"clock-{'.'.join(chain[:2])}",
+                    f"line {node.lineno}: {'.'.join(chain)}() — inject a "
+                    f"clock (runtime.coordinator pattern) instead of "
+                    f"reading the wall clock in library code"))
+            if chain[:2] in {("np", "random"), ("numpy", "random")} or \
+                    (len(chain) == 2 and chain[0] == "random"):
+                findings.append(Finding(
+                    "lint.global-clock-prng", subject,
+                    f"prng-{'.'.join(chain[:2])}",
+                    f"line {node.lineno}: {'.'.join(chain)}(...) — global "
+                    f"PRNG in library code; thread an explicit jax PRNG "
+                    f"key instead"))
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if _attr_chain(tgt)[:2] == ("jax", "config"):
+                    findings.append(Finding(
+                        "lint.jax-config-mutation", subject, "assign",
+                        f"line {node.lineno}: assigning jax.config "
+                        f"attributes in library code"))
+
+    if in_library:
+        for lineno, var, n in _string_switch_runs(tree):
+            findings.append(Finding(
+                "lint.string-switch", subject, f"switch-{var}",
+                f"line {lineno}: if/elif chain compares {var!r} against "
+                f"{n} string literals — use a dispatch dict (the "
+                f"core.sketch._BACKENDS convention)"))
+    return findings
+
+
+def _raise_key(node) -> str:
+    """Fingerprint key for a raise site: the enclosing text is volatile,
+    so key on the exception arg source (stable under line moves)."""
+    try:
+        return ast.unparse(node.exc.args[0])[:60] if node.exc.args else "empty"
+    except Exception:
+        return "unparse-failed"
+
+
+def lint_tree(root=None) -> tuple:
+    """(findings, files-scanned) over every .py under ``src/repro``."""
+    root = Path(root) if root is not None else \
+        Path(__file__).resolve().parents[1]
+    findings, files = [], []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root)
+        files.append(str(rel))
+        findings.extend(lint_file(path, rel))
+    return findings, files

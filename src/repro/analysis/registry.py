@@ -1,0 +1,107 @@
+"""Entry-point registry: engines declare WHAT the analyzer traces.
+
+Each engine module registers its public entry points at import time
+(bottom-of-module hook) as a :class:`EntryPoint`: a ``build`` thunk
+returning ``(fn, args)`` that ``jax.make_jaxpr`` can trace at
+production-representative shapes, plus the entry's declared invariants —
+an :class:`OverlapSpec` for the double-buffered-collectives contract and
+``max_collective_elems`` for the no-replicated-blowup contract.  This
+module is import-light (no jax) so engines can depend on it without
+cycles; the analyzer imports the engines, never the reverse.
+
+Meshes inside ``build`` thunks should size themselves off
+``len(jax.devices())`` — the same registration then traces in-process
+(1 device) and under the CI 8-fake-device environment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+__all__ = ["OverlapSpec", "EntryPoint", "register", "entry_points", "get",
+           "load_entry_points", "ENGINE_MODULES"]
+
+
+@dataclass(frozen=True)
+class OverlapSpec:
+    """Declares an entry's double-buffered-collectives invariant.
+
+    ``norm_shape`` identifies the pivot-norm all-reduces: every ``psum``
+    equation in the (innermost) shard_map body with this output shape.
+    ``deflate`` picks the matcher for the trailing-update equations:
+    ``'panel_apply'`` (the fused Pallas stage-B call, matched by jitted
+    name or pallas_call src info) or ``'sub'`` (a plain XLA subtract of
+    ``deflate_shape``, the gram oracle's deflation).  With
+    ``expect_overlap=True`` the rule requires panel ``p``'s deflation
+    OUT of the dependency cone of the psum selecting panel ``p+1``'s
+    pivots; ``False`` flips it into a positive control — the rule must
+    DETECT the serialization, proving the analyzer sees what it claims.
+    """
+    norm_shape: tuple
+    deflate: str                    # 'panel_apply' | 'sub'
+    deflate_shape: tuple = ()       # required when deflate == 'sub'
+    expect_overlap: bool = True
+    min_panels: int = 2             # fewer matched deflations => control-failed
+
+
+@dataclass(frozen=True)
+class EntryPoint:
+    """One traced entry: ``build() -> (fn, args)`` plus declared contracts.
+
+    ``max_collective_elems``: collectives (all_gather/psum) producing an
+    output with MORE elements than this are replicated-blowup findings;
+    ``None`` skips the rule for this entry.  ``tags`` are free-form
+    markers (e.g. ``'control'``) surfaced in the report.
+    """
+    name: str
+    build: Callable
+    overlap: Optional[OverlapSpec] = None
+    max_collective_elems: Optional[int] = None
+    tags: tuple = ()
+
+
+_REGISTRY: dict = {}
+
+# Imported (in order) by load_entry_points to trigger the registration
+# hooks; keep in sync with the engine modules that call register().
+ENGINE_MODULES = (
+    "repro.core.rid",
+    "repro.core.qr",
+    "repro.core.qr_dist",
+    "repro.core.distributed",
+    "repro.stream.rid_stream",
+)
+
+
+def register(name: str, build: Optional[Callable] = None, *,
+             overlap: Optional[OverlapSpec] = None,
+             max_collective_elems: Optional[int] = None,
+             tags: tuple = ()):
+    """Register an entry point; usable directly or as a decorator on the
+    build thunk.  Re-registering a name is an error (it would silently
+    shadow a contract)."""
+    def _do(b):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate analysis entry point {name!r}")
+        _REGISTRY[name] = EntryPoint(
+            name=name, build=b, overlap=overlap,
+            max_collective_elems=max_collective_elems, tags=tuple(tags))
+        return b
+    return _do if build is None else _do(build)
+
+
+def entry_points() -> tuple:
+    return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))
+
+
+def get(name: str) -> EntryPoint:
+    return _REGISTRY[name]
+
+
+def load_entry_points() -> tuple:
+    """Import every engine module (running their registration hooks) and
+    return the full registry."""
+    import importlib
+    for mod in ENGINE_MODULES:
+        importlib.import_module(mod)
+    return entry_points()

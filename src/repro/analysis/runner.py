@@ -1,0 +1,76 @@
+"""Orchestrates every analysis pass into one :class:`Report`.
+
+Order: (1) jaxpr rules over every registered entry point, (2) kernel
+contract checks over every ``repro.kernels`` package, (3) AST lint over
+``src/repro``, (4) the control pass — the serialized jaxpr fixture and
+the VMEM-hostile fixture kernel must each be FLAGGED, otherwise a
+``controls.*`` finding gates CI: an analyzer that stops seeing planted
+bugs is itself the regression.  (The gram-path entries are in-registry
+controls: registered with ``expect_overlap=False``, their rule fails
+loudly if the serialization they embody goes undetected.)
+"""
+from __future__ import annotations
+
+from . import registry
+from .jaxpr import analyze_entry
+from .kernels import check_all_kernels, check_package
+from .lint import lint_tree
+from .report import Finding, Report
+
+__all__ = ["run_all", "run_controls"]
+
+
+def run_controls() -> list:
+    """Positive controls: plant a bug, require the alarm."""
+    from .fixtures import BADKERNEL_BASE, FIXTURES
+    findings = []
+
+    planted = analyze_entry(FIXTURES["fixture.serialized-psum"])
+    if not any(f.rule == "jaxpr.collective-overlap" for f in planted):
+        findings.append(Finding(
+            "controls.overlap-rule-blind", "fixture.serialized-psum",
+            "no-alarm",
+            f"the deliberately-serialized fixture produced "
+            f"{[f.rule for f in planted]} but no "
+            f"jaxpr.collective-overlap — the overlap rule is blind"))
+
+    clean = analyze_entry(FIXTURES["fixture.overlapped-psum"])
+    if any(f.rule == "jaxpr.collective-overlap" for f in clean):
+        findings.append(Finding(
+            "controls.overlap-rule-noisy", "fixture.overlapped-psum",
+            "false-alarm",
+            "the correctly-overlapped fixture was flagged — the overlap "
+            "rule raises false alarms"))
+
+    bad = check_package("badkernel", base=BADKERNEL_BASE)
+    if not any(f.rule == "kernels.vmem-overflow" for f in bad):
+        findings.append(Finding(
+            "controls.vmem-rule-blind", "badkernel", "no-alarm",
+            f"the VMEM-hostile fixture kernel produced "
+            f"{[f.rule for f in bad]} but no kernels.vmem-overflow — "
+            f"the estimator is vacuous"))
+    return findings
+
+
+def run_all(*, controls: bool = True) -> Report:
+    report = Report()
+
+    entries = registry.load_entry_points()
+    for ep in entries:
+        report.extend(analyze_entry(ep))
+    report.mark_pass("jaxpr", [e.name for e in entries])
+
+    findings, pkgs = check_all_kernels()
+    report.extend(findings)
+    report.mark_pass("kernels", pkgs)
+
+    findings, files = lint_tree()
+    report.extend(findings)
+    report.mark_pass("lint", files)
+
+    if controls:
+        report.extend(run_controls())
+        report.mark_pass("controls", ["fixture.serialized-psum",
+                                      "fixture.overlapped-psum",
+                                      "badkernel"])
+    return report

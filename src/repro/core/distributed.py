@@ -62,6 +62,8 @@ from .qr_dist import gather_columns_psum, panel_parallel_qr_local
 from .sketch import sketch as _sketch
 from .tsolve import solve_upper_triangular_xla
 from .types import IDResult
+from .validate import (check_divides, check_l_ge_k, check_panel,
+                       check_rank_bounds)
 
 __all__ = ["rid_distributed", "shard_columns"]
 
@@ -157,20 +159,16 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
     """
     l = 2 * k if l is None else l
     n = A.shape[1]
-    if l < k:
-        raise ValueError(f"need l >= k, got l={l} < k={k}")
-    if not (0 < k <= min(l, n)):
-        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, l={l}, n={n}")
+    check_l_ge_k(l, k)
+    check_rank_bounds(k, l, n)
     if qr_impl not in QR_IMPLS:
         raise ValueError(f"unknown qr impl {qr_impl!r}; expected one of "
                          f"{QR_IMPLS}")
     qr_panel = resolve_panel(qr_panel, k, l)
-    if qr_panel < 1:
-        raise ValueError(f"need qr_panel >= 1, got {qr_panel}")
+    check_panel(qr_panel, name="qr_panel")
     resolve_norm_recompute(qr_norm_recompute)  # eager: reject before tracing
     ndev = mesh.shape[axis]
-    if n % ndev:
-        raise ValueError(f"n={n} must divide the '{axis}' axis ({ndev} devices)")
+    check_divides(n, ndev, axis)
 
     if qr_impl == "panel_parallel":
         fn = _local_rid_panel_parallel_fn(k, l, sketch_kind, axis, ndev,
@@ -198,3 +196,39 @@ def rid_distributed(key: jax.Array, A: jax.Array, k: int, *,
             A.dtype, jnp.complexfloating):
         P_sh = P_sh.real.astype(A.dtype)
     return IDResult(B=B, P=P_sh, J=piv, Q=Q, R=R)
+
+
+# ------------------------------------------------------------- analysis
+# Registered contracts: both distributed RID paths at the canonical
+# analyzer shape (m=64, n=400, k=12, l=2k=24, panel=7).  The
+# panel-parallel path PROMISES no collective ever materializes l x n per
+# device (budget l*n - 1); the gather-and-replicate path documents its
+# one l x n all_gather as the allowed maximum (budget exactly l*n —
+# anything bigger is a regression there too).
+
+def _analysis_build_rid_distributed(qr_impl: str):
+    def build():
+        import numpy as np
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+
+        def fn(key, A):
+            return rid_distributed(key, A, 12, mesh=mesh, axis="data",
+                                   sketch_kind="gaussian", qr_impl=qr_impl,
+                                   qr_panel=7)
+        return fn, (jax.random.key(0),
+                    jax.ShapeDtypeStruct((64, 400), jnp.float32))
+    return build
+
+
+def _register_analysis_entries():
+    from ..analysis.registry import register
+    l, n = 24, 400
+    register("rid_distributed.panel_parallel",
+             _analysis_build_rid_distributed("panel_parallel"),
+             max_collective_elems=l * n - 1)
+    register("rid_distributed.blocked",
+             _analysis_build_rid_distributed("blocked"),
+             max_collective_elems=l * n)
+
+
+_register_analysis_entries()

@@ -76,6 +76,7 @@ from jax import lax
 
 from ..kernels.panel_step import panel_step
 from .types import QRResult
+from .validate import check_panel, check_rank_bounds
 
 __all__ = ["cgs2_pivoted_qr", "blocked_pivoted_qr", "pivoted_qr",
            "householder_qr", "cholesky_qr2", "resolve_panel",
@@ -120,8 +121,7 @@ def cgs2_pivoted_qr(Y: jax.Array, k: int) -> QRResult:
     error and ``Y[:, piv] ~= Q @ triu(R[:, piv])``.
     """
     l, n = Y.shape
-    if not (0 < k <= min(l, n)):
-        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, Y of shape {Y.shape}")
+    check_rank_bounds(k, l, n)
     dtype = Y.dtype
     rdtype = jnp.finfo(dtype).dtype
 
@@ -350,10 +350,8 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
     oracle's contract.
     """
     l, n = Y.shape
-    if not (0 < k <= min(l, n)):
-        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, Y of shape {Y.shape}")
-    if panel < 1:
-        raise ValueError(f"need panel >= 1, got {panel}")
+    check_rank_bounds(k, l, n)
+    check_panel(panel)
     if panel_impl not in ("fused", "auto", "chol", "house"):
         raise ValueError(f"unknown panel_impl {panel_impl!r}")
     resolve_norm_recompute(norm_recompute)      # validated; no-op here (doc)
@@ -500,3 +498,22 @@ def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
                                   panel_impl=panel_impl,
                                   norm_recompute=norm_recompute)
     raise ValueError(f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")
+
+
+# ------------------------------------------------------------- analysis
+# Registered contract: the production blocked engine at the analyzer's
+# canonical sketch shape — single-device dataflow rules (dtype leaks,
+# host transfers) re-proven on every CI run.
+
+def _analysis_build_blocked():
+    def fn(Y):
+        return pivoted_qr(Y, 21, impl="blocked", panel=7)
+    return fn, (jax.ShapeDtypeStruct((48, 400), jnp.float32),)
+
+
+def _register_analysis_entries():
+    from ..analysis.registry import register
+    register("pivoted_qr.blocked", _analysis_build_blocked)
+
+
+_register_analysis_entries()

@@ -83,6 +83,7 @@ from ..kernels.panel_gram import panel_gram
 from ..kernels.panel_step import panel_apply, panel_coeff
 from .qr import _h, householder_qr, resolve_norm_recompute
 from .types import QRResult
+from .validate import check_divides, check_panel, check_rank_bounds
 
 __all__ = ["panel_parallel_pivoted_qr", "panel_parallel_qr_local",
            "gather_columns_psum"]
@@ -182,13 +183,8 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
     (k x n_loc) stays sharded.
     """
     l, n_loc = Y_loc.shape
-    if not (0 < k <= min(l, n_loc * ndev)):
-        raise ValueError(f"panel_parallel_qr_local: need 0 < k <= "
-                         f"min(l, n); got k={k}, Y_loc of shape "
-                         f"{Y_loc.shape} over ndev={ndev}")
-    if panel < 1:
-        raise ValueError(f"panel_parallel_qr_local: need panel >= 1, "
-                         f"got panel={panel}")
+    check_rank_bounds(k, l, n_loc * ndev, ctx="panel_parallel_qr_local: ")
+    check_panel(panel, ctx="panel_parallel_qr_local: ")
     if panel_impl not in ("fused", "gram"):
         raise ValueError(f"panel_parallel_qr_local: unknown panel_impl "
                          f"{panel_impl!r}; expected 'fused' or 'gram'")
@@ -319,20 +315,14 @@ def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
     ``core.qr.pivoted_qr`` up to panel-granularity pivot order.
     """
     l, n = Y.shape
-    if not (0 < k <= min(l, n)):
-        raise ValueError(f"panel_parallel_pivoted_qr: need 0 < k <= "
-                         f"min(l, n); got k={k}, l={l}, n={n}")
-    if panel < 1:
-        raise ValueError(f"panel_parallel_pivoted_qr: need panel >= 1, "
-                         f"got panel={panel}")
+    check_rank_bounds(k, l, n, ctx="panel_parallel_pivoted_qr: ")
+    check_panel(panel, ctx="panel_parallel_pivoted_qr: ")
     if panel_impl not in ("fused", "gram"):
         raise ValueError(f"panel_parallel_pivoted_qr: unknown panel_impl "
                          f"{panel_impl!r}; expected 'fused' or 'gram'")
     resolve_norm_recompute(norm_recompute)     # eager: reject before tracing
     ndev = mesh.shape[axis]
-    if n % ndev:
-        raise ValueError(f"panel_parallel_pivoted_qr: n={n} must divide "
-                         f"the '{axis}' axis ({ndev} devices)")
+    check_divides(n, ndev, axis, ctx="panel_parallel_pivoted_qr: ")
 
     fn = partial(panel_parallel_qr_local, k=k, axis=axis, ndev=ndev,
                  panel=panel, panel_impl=panel_impl,
@@ -345,3 +335,42 @@ def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
     )
     Q, piv, R = jax.jit(mapped)(Y)
     return QRResult(Q=Q, R=R, piv=piv)
+
+
+# ------------------------------------------------------------- analysis
+# Registered contracts (repro.analysis): the fused path PROMISES the
+# double-buffered-collectives schedule (module docstring) — the analyzer
+# re-proves it on every CI run; the gram path is registered as the
+# serialized positive control (expect_overlap=False: the analyzer must
+# DETECT its serialization or fail its own control).  48x400, k=21,
+# panel=7 => 3 panels; 400 divides both 1 (in-process) and 8 (CI) devs.
+
+def _analysis_build(panel_impl: str):
+    def build():
+        import numpy as np
+        l, n, k, b = 48, 400, 21, 7
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        ndev = mesh.shape["data"]
+        fn = partial(panel_parallel_qr_local, k=k, axis="data", ndev=ndev,
+                     panel=b, panel_impl=panel_impl)
+        mapped = shard_map(fn, mesh=mesh, in_specs=(P(None, "data"),),
+                           out_specs=(P(), P(), P(None, "data")),
+                           check_vma=False)
+        return mapped, (jax.ShapeDtypeStruct((l, n), jnp.float32),)
+    return build
+
+
+def _register_analysis_entries():
+    from ..analysis.registry import OverlapSpec, register
+    l, n = 48, 400
+    register("panel_parallel_qr_local.fused", _analysis_build("fused"),
+             overlap=OverlapSpec(norm_shape=(n,), deflate="panel_apply"),
+             max_collective_elems=l * n - 1)
+    register("panel_parallel_qr_local.gram", _analysis_build("gram"),
+             overlap=OverlapSpec(norm_shape=(n,), deflate="sub",
+                                 deflate_shape=(l, -1),
+                                 expect_overlap=False),
+             max_collective_elems=l * n - 1, tags=("control",))
+
+
+_register_analysis_entries()

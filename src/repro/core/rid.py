@@ -39,6 +39,7 @@ from .qr import pivoted_qr
 from .sketch import sketch
 from .tsolve import interp_from_qr
 from .types import IDResult
+from .validate import check_l_ge_k
 
 __all__ = ["rid", "rid_from_sketch"]
 
@@ -100,8 +101,27 @@ def rid(key: jax.Array, A: jax.Array, k: int, *, l: Optional[int] = None,
         ``core.qr.resolve_norm_recompute``.
     """
     l = 2 * k if l is None else l
-    if l < k:
-        raise ValueError(f"need l >= k, got l={l} < k={k}")
+    check_l_ge_k(l, k)
     Y = sketch(key, A, l, kind=sketch_kind).Y
     return rid_from_sketch(A, Y, k, qr_impl=qr_impl, qr_panel=qr_panel,
                            qr_norm_recompute=qr_norm_recompute)
+
+
+# ------------------------------------------------------------- analysis
+# Registered contract: the end-to-end single-device RID (gaussian sketch
+# so the trace is real-dtype'd; srft's complex FFT path has its own
+# explicit casts).
+
+def _analysis_build_rid():
+    def fn(key, A):
+        return rid(key, A, 21, sketch_kind="gaussian")
+    return fn, (jax.random.key(0),
+                jax.ShapeDtypeStruct((256, 400), jnp.float32))
+
+
+def _register_analysis_entries():
+    from ..analysis.registry import register
+    register("rid", _analysis_build_rid)
+
+
+_register_analysis_entries()

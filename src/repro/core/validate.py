@@ -1,0 +1,42 @@
+"""Shared eager argument validation for the decomposition entry points.
+
+One implementation of the repo's uniform validation contract — every
+check raises ``ValueError`` EAGERLY (before tracing) with the offending
+argument's NAME and the RECEIVED value in the message — shared by
+``core.qr``, ``core.qr_dist``, ``core.distributed``, ``core.rid`` and
+``stream.rid_stream`` instead of the copy-pasted per-module raises the
+``duplicate-validation`` lint rule (``repro.analysis.lint``) used to
+flag.  ``ctx`` prefixes the message with the raising entry point
+(``"panel_parallel_qr_local: "``) where callers already did so.
+"""
+from __future__ import annotations
+
+__all__ = ["check_rank_bounds", "check_l_ge_k", "check_panel",
+           "check_divides"]
+
+
+def check_rank_bounds(k: int, l: int, n: int, *, ctx: str = "") -> None:
+    """Require ``0 < k <= min(l, n)`` (the rank fits the sketch)."""
+    if not (0 < k <= min(l, n)):
+        raise ValueError(f"{ctx}need 0 < k <= min(l, n); "
+                         f"got k={k}, l={l}, n={n}")
+
+
+def check_l_ge_k(l: int, k: int, *, ctx: str = "") -> None:
+    """Require the sketch height to cover the rank: ``l >= k``."""
+    if l < k:
+        raise ValueError(f"{ctx}need l >= k, got l={l} < k={k}")
+
+
+def check_panel(panel: int, *, name: str = "panel", ctx: str = "") -> None:
+    """Require a positive panel width (``name`` spells the caller's kwarg
+    — 'panel' or 'qr_panel' — so the message points at what to change)."""
+    if panel < 1:
+        raise ValueError(f"{ctx}need {name} >= 1, got {name}={panel}")
+
+
+def check_divides(n: int, ndev: int, axis: str, *, ctx: str = "") -> None:
+    """Require the column count to shard evenly over the mesh axis."""
+    if n % ndev:
+        raise ValueError(f"{ctx}n={n} must divide the '{axis}' axis "
+                         f"({ndev} devices)")

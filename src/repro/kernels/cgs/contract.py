@@ -1,0 +1,28 @@
+"""Static contract for the CGS block-deflation kernels (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import panel_deflate
+    q = jax.ShapeDtypeStruct((256, 32), f32)
+    z = jax.ShapeDtypeStruct((256, 4096), f32)
+    return panel_deflate, (q, z), {}
+
+
+CONTRACT = KernelContract(
+    name="cgs",
+    ops=("project_out", "panel_deflate"),
+    kernels=("project_out_kernel", "panel_deflate_kernel"),
+    refs=("project_out_ref", "panel_deflate_ref"),
+    pairs=(("project_out", "project_out_ref"),
+           ("panel_deflate", "panel_deflate_ref")),
+    example=_example,
+)

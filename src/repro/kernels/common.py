@@ -3,8 +3,19 @@
 All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling with
 MXU-aligned tiles) and are VALIDATED on CPU via ``interpret=True``,
 which executes the kernel body with the same blocking semantics.
+
+Every kernel package additionally ships a ``contract.py`` declaring a
+:class:`KernelContract` — the static metadata ``repro.analysis.kernels``
+checks in CI: the kernel/ref/ops triple with matching signatures, the
+package's replay/blocking constants, a representative example call whose
+declared BlockSpecs must fit the per-backend VMEM budget, and (where the
+ops wrapper validates geometry eagerly) a known-bad call that must raise
+``ValueError`` before tracing.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,3 +59,35 @@ def acc_dtype_for(dtype) -> jnp.dtype:
     """Accumulator dtype: f32 for <=32-bit floats (MXU accumulates f32),
     f64 when the input is f64 (interpret-mode / CPU validation path)."""
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+@dataclass(frozen=True)
+class KernelContract:
+    """Static contract of one ``kernels/<name>/`` package, checked by
+    ``repro.analysis.kernels`` (the CI-gated contract pass).
+
+    ``pairs`` couples each public ops wrapper to its pure-jnp oracle:
+    the checker requires both to exist and their leading positional
+    parameter NAMES to agree (tuning/interpret kwargs excluded), so a
+    kernel cannot silently drift from the reference it is validated
+    against.  ``example`` builds ``(fn, args, static_kwargs)`` for one
+    representative REAL-dtype call at production-like shapes; the
+    checker traces it abstractly while capturing every ``pl.pallas_call``
+    it issues and sums the declared per-grid-step block bytes against
+    ``vmem_budget`` (the single-VMEM-residency claims become checked
+    numbers).  ``constants`` pins named module attributes — replay /
+    canonicality constants like ``ACCUM_BLOCK=128`` whose silent change
+    would break bit-for-bit contracts elsewhere.  ``bad_call``, when
+    given, must raise ``ValueError`` EAGERLY (the geometry-lie check:
+    validation happens in ``ops.py``, not deep inside a traced GEMM).
+    """
+    name: str
+    ops: tuple            # public names exported by ops.py
+    kernels: tuple        # raw pallas_call wrappers exported by kernel.py
+    refs: tuple           # oracle names exported by ref.py
+    pairs: tuple = ()     # ((ops_name, ref_name), ...) signature couples
+    example: Optional[Callable] = None   # () -> (fn, args, static_kwargs)
+    constants: dict = field(default_factory=dict)  # kernel.py attr -> value
+    bad_call: Optional[Callable] = None  # () -> None, must raise ValueError
+    vmem_budget: int = VMEM_BUDGET_BYTES
+    measure_residency: bool = False      # sample live bytes on a real call

@@ -1,0 +1,28 @@
+"""Static contract for the flash-attention kernel (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import flash_attention
+    q = jax.ShapeDtypeStruct((1, 512, 4, 64), f32)
+    k = jax.ShapeDtypeStruct((1, 512, 4, 64), f32)
+    v = jax.ShapeDtypeStruct((1, 512, 4, 64), f32)
+    return flash_attention, (q, k, v), {}
+
+
+CONTRACT = KernelContract(
+    name="flash",
+    ops=("flash_attention",),
+    kernels=("flash_kernel",),
+    refs=("flash_ref",),
+    pairs=(("flash_attention", "flash_ref"),),
+    example=_example,
+)

@@ -1,0 +1,27 @@
+"""Static contract for the fused panel-Gram kernel (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import panel_gram
+    c = jax.ShapeDtypeStruct((256, 32), f32)
+    z = jax.ShapeDtypeStruct((256, 4096), f32)
+    return panel_gram, (c, z), {}
+
+
+CONTRACT = KernelContract(
+    name="panel_gram",
+    ops=("panel_gram",),
+    kernels=("panel_gram_kernel",),
+    refs=("panel_gram_ref",),
+    pairs=(("panel_gram", "panel_gram_ref"),),
+    example=_example,
+)

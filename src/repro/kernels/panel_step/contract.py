@@ -1,0 +1,30 @@
+"""Static contract for the fused panel-step kernels (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import panel_step
+    c = jax.ShapeDtypeStruct((256, 32), f32)
+    z = jax.ShapeDtypeStruct((256, 4096), f32)
+    return panel_step, (c, z), {}
+
+
+CONTRACT = KernelContract(
+    name="panel_step",
+    ops=("panel_step", "panel_coeff", "panel_apply"),
+    kernels=("panel_step_kernel", "panel_coeff_kernel",
+             "panel_apply_kernel"),
+    refs=("panel_step_ref", "panel_coeff_ref", "panel_apply_ref"),
+    pairs=(("panel_step", "panel_step_ref"),
+           ("panel_coeff", "panel_coeff_ref"),
+           ("panel_apply", "panel_apply_ref")),
+    example=_example,
+)

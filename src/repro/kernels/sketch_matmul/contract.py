@@ -1,0 +1,27 @@
+"""Static contract for the tiled sketch matmul (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import sketch_matmul
+    omega = jax.ShapeDtypeStruct((128, 1024), f32)
+    a = jax.ShapeDtypeStruct((1024, 512), f32)
+    return sketch_matmul, (omega, a), {}
+
+
+CONTRACT = KernelContract(
+    name="sketch_matmul",
+    ops=("sketch_matmul",),
+    kernels=("sketch_matmul_kernel",),
+    refs=("sketch_matmul_ref",),
+    pairs=(("sketch_matmul", "sketch_matmul_ref"),),
+    example=_example,
+)

@@ -1,0 +1,36 @@
+"""Static contract for the FWHT / SRHT kernels (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import srht
+    signs = jax.ShapeDtypeStruct((1000,), f32)
+    a = jax.ShapeDtypeStruct((1000, 512), f32)
+    rows = jax.ShapeDtypeStruct((64,), jnp.int32)
+    return srht, (signs, a, rows), {}
+
+
+def _bad_call():
+    # FWHT length 100 is not a power of two: fwht must reject it EAGERLY
+    # with the offending length named.
+    from .ops import fwht
+    fwht(jnp.ones((100, 8), f32))
+
+
+CONTRACT = KernelContract(
+    name="srht",
+    ops=("fwht", "srht"),
+    kernels=("fwht_kernel",),
+    refs=("fwht_ref", "srht_ref"),
+    pairs=(("fwht", "fwht_ref"), ("srht", "srht_ref")),
+    example=_example,
+    bad_call=_bad_call,
+)

@@ -1,0 +1,27 @@
+"""Static contract for the triangular interpolation solver (see
+``kernels.common.KernelContract`` for field semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import KernelContract
+
+f32 = jnp.float32
+
+
+def _example():
+    from .ops import tsolve
+    r1 = jax.ShapeDtypeStruct((64, 64), f32)
+    r2 = jax.ShapeDtypeStruct((64, 4096), f32)
+    return tsolve, (r1, r2), {}
+
+
+CONTRACT = KernelContract(
+    name="tsolve",
+    ops=("tsolve",),
+    kernels=("tsolve_kernel",),
+    refs=("tsolve_ref",),
+    pairs=(("tsolve", "tsolve_ref"),),
+    example=_example,
+)

@@ -89,7 +89,8 @@ def _mixer_init(key, cfg: ModelConfig, kind: str, *, cross: bool = False) -> dic
         return xlstm_mod.mlstm_init(key, cfg)
     if kind == SLSTM:
         return xlstm_mod.slstm_init(key, cfg)
-    raise ValueError(kind)
+    raise ValueError(f"unknown mixer kind {kind!r}; expected one of "
+                     f"{(ATTN, MAMBA, MLSTM, SLSTM)}")
 
 
 def _block_init(key, cfg: ModelConfig, sig: tuple[str, bool], *,

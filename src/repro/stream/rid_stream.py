@@ -55,6 +55,7 @@ import numpy as np
 from ..core.rid import _cast_interp, _qr_interp
 from ..core.sketch import finalize_gaussian_sketch, gaussian_omega_cols
 from ..core.types import IDResult
+from ..core.validate import check_l_ge_k, check_rank_bounds
 from ..kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
 from .chunks import ChunkSource, chunk_bounds, num_chunks
 
@@ -129,10 +130,8 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
             f"bit-for-bit identical to the in-memory one), got "
             f"chunk_rows={chunk_rows}")
     l = 2 * k if l is None else l
-    if l < k:
-        raise ValueError(f"need l >= k, got l={l} < k={k}")
-    if not (0 < k <= min(l, n)):
-        raise ValueError(f"need 0 < k <= min(l, n); got k={k}, l={l}, n={n}")
+    check_l_ge_k(l, k)
+    check_rank_bounds(k, l, n)
 
     # ---- pass 1: double-buffered sketch accumulation -------------------
     C = num_chunks(source)
@@ -163,3 +162,29 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
         r0, r1 = chunk_bounds(source, c)
         B[r0:r1] = np.asarray(_checked_chunk(source, c))[:, J]
     return IDResult(B=B, P=P, J=piv, Q=Q, R=R)
+
+
+# ------------------------------------------------------------- analysis
+# Registered contract: one pass-1 accumulate step fused with the shared
+# steps-2-3 jit boundary — the device-side program of the streaming path
+# (the host chunk loop itself is not traceable; its residency is metered
+# by the shared sampler in repro.analysis.residency / bench_stream).
+
+def _analysis_build_stream_step():
+    l, n, k, rows = 48, 400, 21, 2 * ACCUM_BLOCK
+
+    def step(x, a, acc):
+        Y = finalize_gaussian_sketch(sketch_accum(x, a, acc), l, jnp.float32)
+        return _qr_interp(Y, k, "blocked", 7, "auto")
+
+    return step, (jax.ShapeDtypeStruct((l, rows), jnp.float32),
+                  jax.ShapeDtypeStruct((rows, n), jnp.float32),
+                  jax.ShapeDtypeStruct((l, n), jnp.float32))
+
+
+def _register_analysis_entries():
+    from ..analysis.registry import register
+    register("rid_streamed.step", _analysis_build_stream_step)
+
+
+_register_analysis_entries()

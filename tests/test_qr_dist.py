@@ -218,91 +218,54 @@ print("OK")
 
 
 def test_norm_psum_overlaps_deflation(subproc):
-    """The double-buffered-collectives acceptance check, on the lowering:
+    """The double-buffered-collectives acceptance check, on the lowering
+    (through the ``repro.analysis`` contracts — the same rule CI runs):
 
-    (1) dependency structure — in the traced program, the norm psum that
-        selects panel p+1's pivots must NOT consume the output of panel
-        p's deflation kernel (stage B ``panel_apply``): the collective is
-        issued from stage A's downdated norms, so the scheduler is free
-        to overlap it with the deflation GEMM.  It MUST still depend on
-        earlier panels' deflations (the checker's positive control), and
-        on the 'gram' oracle path the same psum DOES consume the
-        deflated shard (the serialization the fused path removes).
+    (1) dependency structure — the norm psum that selects panel p+1's
+        pivots must NOT consume the output of panel p's deflation kernel
+        (stage B ``panel_apply``): the collective is issued from stage
+        A's downdated norms, so the scheduler is free to overlap it with
+        the deflation GEMM.  It MUST still depend on earlier panels'
+        deflations (the rule's built-in positive control), and on the
+        'gram' oracle path the same psum DOES consume the deflated shard
+        (the serialization the fused path removes) — plus a probe that
+        holds the gram schedule to the fused expectation and demands the
+        alarm.
     (2) the compiled HLO still contains zero l x n (or larger)
         all-gathers — the overlap did not reintroduce replication."""
     r = subproc(PRELUDE + """
 import re
-from functools import partial
-from jax.sharding import PartitionSpec as P
-from repro.compat import shard_map
-from repro.core.qr_dist import panel_parallel_qr_local
+from repro.analysis.jaxpr import analyze_entry
+from repro.analysis.registry import (EntryPoint, OverlapSpec, get,
+                                     load_entry_points)
 
-l, n, k, b = 48, 400, 21, 7                     # 3 panels
-def traced(panel_impl):
-    fn = partial(panel_parallel_qr_local, k=k, axis="data", ndev=8,
-                 panel=b, panel_impl=panel_impl)
-    return shard_map(fn, mesh=mesh, in_specs=(P(None, "data"),),
-                     out_specs=(P(), P(), P(None, "data")),
-                     check_vma=False)
+load_entry_points()
 
-def body_eqns(jaxpr):
-    # the shard_map body's equations, in issue order
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):          # shard_map: ClosedJaxpr param
-                return v.jaxpr.eqns
-            if hasattr(v, "eqns"):
-                return v.eqns
-    raise AssertionError("no inner jaxpr found")
+# (1) via the registered contracts — exactly what the CI analyze job
+# re-proves: the fused entry satisfies the overlap rule (including its
+# built-in previous-panel cone control), and the gram entry passes its
+# serialized positive control (the analyzer DETECTED the serialization).
+for name in ("panel_parallel_qr_local.fused",
+             "panel_parallel_qr_local.gram"):
+    findings = analyze_entry(get(name))
+    assert not findings, (name, [(f.rule, f.key, f.message)
+                                 for f in findings])
 
-def analyze(panel_impl):
-    eqns = body_eqns(jax.make_jaxpr(traced(panel_impl))(jnp.zeros((l, n))))
-    # transitive producer cone per equation (conservative: an eqn depends
-    # on every eqn that defines one of its free input vars)
-    producers, cones = {}, []
-    for i, e in enumerate(eqns):
-        cone = set()
-        for v in e.invars:
-            j = producers.get(id(v))
-            if j is not None:
-                cone |= {j} | cones[j]
-        cones.append(cone)
-        for v in e.outvars:
-            producers[id(v)] = i
-    norm_psums = [i for i, e in enumerate(eqns)
-                  if "psum" in e.primitive.name
-                  and e.outvars[0].aval.shape == (n,)]
-    def is_deflate(e):
-        if panel_impl == "fused":
-            # stage B: the jitted panel_apply kernel call (a pjit eqn
-            # wrapping the pallas_call) or, if inlined, the raw kernel
-            return ("panel_apply" in str(e.params.get("name", "")) or
-                    (e.primitive.name == "pallas_call" and "apply" in
-                     str(e.params.get("name_and_src_info", ""))))
-        # gram path deflates with a plain XLA subtract of the shard shape
-        return e.primitive.name == "sub" and \\
-            e.outvars[0].aval.shape == (l, n // 8)
-    deflations = [i for i, e in enumerate(eqns) if is_deflate(e)]
-    assert len(norm_psums) >= 3 and len(deflations) == 3, \\
-        (panel_impl, norm_psums, deflations)
-    return norm_psums, deflations, cones
-
-# fused: psum issued during iteration p (selects p+1) is independent of
-# iteration p's deflation, but does see iteration p-1's.
-ps, dfl, cones = analyze("fused")
-for p in range(3):
-    psum_i = ps[p + 1]                    # ps[0] is the prologue psum
-    assert dfl[p] not in cones[psum_i], (p, ps, dfl)
-assert dfl[0] in cones[ps[2]], "positive control: stage A of panel 1 " \\
-    "reads the shard deflated by panel 0"
-
-# gram oracle: the same psum DOES wait on the deflation (positive
-# control that the checker detects serialization when it exists).
-ps_g, dfl_g, cones_g = analyze("gram")
-assert dfl_g[0] in cones_g[ps_g[1]], (ps_g, dfl_g)
+# Regression probe: hold the serialized gram schedule to the FUSED
+# expectation — the overlap rule must fire, proving the clean fused
+# result above is a detection, not silence.
+g = get("panel_parallel_qr_local.gram")
+probe = EntryPoint(name="probe.gram-as-fused", build=g.build,
+                   overlap=OverlapSpec(norm_shape=(400,), deflate="sub",
+                                       deflate_shape=(48, -1),
+                                       expect_overlap=True))
+fs = analyze_entry(probe)
+assert any(f.rule == "jaxpr.collective-overlap" for f in fs), \\
+    [(f.rule, f.key) for f in fs]
 
 # (2) compiled HLO of the full distributed RID keeps zero l x n gathers
-from jax.sharding import NamedSharding
+from jax.sharding import NamedSharding, PartitionSpec as P
+l, n, k, b = 48, 400, 21, 7
 m = 256
 A = jax.ShapeDtypeStruct((m, n), jnp.float64,
                          sharding=NamedSharding(mesh, P(None, "data")))

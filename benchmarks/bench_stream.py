@@ -14,8 +14,21 @@ buffers + the accumulator live: the streaming peak), and records
   (= serialized / pipelined; ~1.0 on CPU where host->device is a
   no-op copy, > 1 wherever a DMA engine overlaps the accumulate GEMM)
 
-into ``BENCH_scaling.json`` (benchmarks/run.py contract).  The run
-asserts the acceptance shape: the largest input exceeds its own
+into ``BENCH_scaling.json`` (benchmarks/run.py contract).  Wall times
+come from the pipeline's OWN obs spans (``repro.obs.tracing`` around
+``rid_streamed``; the root span's duration is the measured wall) rather
+than a stopwatch around the call, so the bench measures exactly what a
+production trace would show.
+
+The largest input additionally runs under DEEP tracing (per-phase
+``block_until_ready`` bracketing — serializes the pipeline, honest
+device time per phase) and emits ``bench = "stream_phases"`` rows: one
+per pipeline phase (h2d / accumulate / qr_interp / gather) with the
+obs-measured ``wall_s`` NEXT TO the v5e-roofline ``model_time_s`` for
+that phase — the measured-vs-modeled pairs benchmarks/run.py turns into
+``model_accuracy`` ratios.
+
+The run asserts the acceptance shape: the largest input exceeds its own
 streaming working set (a decomposition that could NOT have run with a
 single resident buffer of the same budget), and the peak stays flat
 across the sweep.
@@ -23,41 +36,69 @@ across the sweep.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
-from repro.analysis.residency import MeteredSource
 from repro.core import rid_streamed
+from repro.obs import MeteredSource, tracing
 from repro.stream import ArraySource
 
+from .bench_scaling import HBM, PEAK
 from .common import append_json_rows, emit
 
 
-def _walled(fn):
-    fn()                                     # warm the per-shape jit caches
-    t0 = time.perf_counter()
-    out = fn()
-    return out, time.perf_counter() - t0
+def _root_dur(tracer, name="rid_streamed") -> float:
+    return next(s.dur for s in tracer.spans if s.name == name)
+
+
+def _span_sum(tracer, name: str) -> float:
+    return sum(s.dur or 0.0 for s in tracer.spans if s.name == name)
+
+
+def _phase_rows(tr, *, m, n, k, l, chunk_rows) -> list[dict]:
+    """Measured (deep-traced obs spans) next to modeled (v5e roofline
+    terms) seconds, one row per streamed-RID phase."""
+    fbytes = 4                                   # f32 sweep
+    model = {
+        # H2D ingest of the whole input, at HBM write bandwidth
+        "h2d": m * n * fbytes / HBM,
+        # accumulate GEMM: Omega^T A, flops vs one full read of A
+        "accumulate": max(2.0 * m * n * l / PEAK, m * n * fbytes / HBM),
+        # QRCP + interpolation solve on the l x n sketch
+        "qr_interp": max(4.0 * l * n * k / PEAK, l * n * fbytes / HBM),
+        # pass-2 host gather of the k pivot columns
+        "gather": m * k * fbytes / HBM,
+    }
+    spans = {"h2d": "stream.h2d", "accumulate": "stream.accumulate",
+             "qr_interp": "stream.qr_interp", "gather": "stream.gather"}
+    return [{"bench": "stream_phases", "m": m, "n": n, "k": k,
+             "chunk_rows": chunk_rows, "phase": ph,
+             "wall_s": _span_sum(tr, spans[ph]),
+             "model_time_s": model[ph]}
+            for ph in model]
 
 
 def stream_sweep(*, full=False, json_path=None):
     n, k, chunk_rows = 512, 48, 512
     ms = (8192, 16384, 32768, 131072) if full else (8192, 16384, 32768)
     l = 2 * k
-    rows = []
+    rows, phase_rows = [], []
     for m in ms:
         A = np.asarray(np.random.default_rng(3).standard_normal((m, n)),
                        np.float32)
         key = jax.random.key(1)
         src = MeteredSource(ArraySource(A, chunk_rows))
-        dec, wall_pipe = _walled(
-            lambda: jax.block_until_ready(
-                rid_streamed(key, src, k).P))
-        _, wall_serial = _walled(
-            lambda: jax.block_until_ready(
-                rid_streamed(key, src, k, overlap=False).P))
+        # warm the per-shape jit caches, then measure off the root span
+        jax.block_until_ready(rid_streamed(key, src, k).P)
+        with tracing() as tr:
+            jax.block_until_ready(rid_streamed(key, src, k).P)
+        wall_pipe = _root_dur(tr)
+        jax.block_until_ready(rid_streamed(key, src, k, overlap=False).P)
+        with tracing() as tr_ser:
+            jax.block_until_ready(
+                rid_streamed(key, src, k, overlap=False).P)
+        wall_serial = _root_dur(tr_ser)
         rows.append({
             "bench": "stream_scaling", "m": m, "n": n, "k": k,
             "chunk_rows": chunk_rows,
@@ -68,10 +109,19 @@ def stream_sweep(*, full=False, json_path=None):
             "wall_serialized_s": wall_serial,
             "overlap_efficiency": wall_serial / wall_pipe,
         })
+        if m == ms[-1]:
+            # Per-phase device timing needs the deep (serializing) mode;
+            # run it once, on the largest input only.
+            with tracing(deep=True) as tr_deep:
+                jax.block_until_ready(rid_streamed(key, src, k).P)
+            phase_rows = _phase_rows(tr_deep, m=m, n=n, k=k, l=l,
+                                     chunk_rows=chunk_rows)
     emit(rows, header="streaming RID: peak device residency (flat in m) "
                       "vs input size; two-stream overlap")
+    emit(phase_rows, header="streamed-RID phases: obs-measured wall vs "
+                            "v5e roofline model (deep tracing, largest m)")
     if json_path:
-        append_json_rows(json_path, rows)
+        append_json_rows(json_path, rows + phase_rows)
     # Acceptance shape: the largest input exceeds the streaming working
     # set it was decomposed with, and the working set is flat in m.
     last = rows[-1]
@@ -79,7 +129,7 @@ def stream_sweep(*, full=False, json_path=None):
         (last["input_bytes"], last["peak_device_bytes"])
     peaks = [r["peak_device_bytes"] for r in rows]
     assert max(peaks) < 2 * min(peaks), f"peak residency grows with m: {peaks}"
-    return rows
+    return rows + phase_rows
 
 
 def main(argv=None):

@@ -1,0 +1,104 @@
+"""Export Chrome trace-event artifacts for the two instrumented hot
+paths: one streamed decomposition and one ServeEngine run.
+
+  PYTHONPATH=src python -m benchmarks.bench_trace [--out DIR] [--deep]
+
+Writes ``stream_trace.json`` (per-chunk H2D / accumulate / gather spans,
+counters, the eq.(3) certificate instant) and ``serve_trace.json``
+(admit / prefill-chunk / decode spans, queue-depth + slot-occupancy
+counter tracks) into ``--out`` (default ``experiments/traces``); the CI
+bench job uploads the directory as an artifact so every run's pipeline
+shape is inspectable in Perfetto (https://ui.perfetto.dev) without
+rerunning anything.  ``--deep`` switches to deep tracing (per-phase
+``block_until_ready`` bracketing — true device times, serialized
+pipeline).
+
+Both traces are validated before exit: spans must nest, the stream
+trace must carry one H2D and one accumulate span per chunk, and the
+files must parse as trace-event JSON — a malformed exporter fails the
+bench job, not the first person to open the artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import tracing
+
+
+def export_stream_trace(path: str, *, deep: bool = False) -> int:
+    from repro.core import rid_streamed
+    from repro.stream import ArraySource
+
+    m, n, k, chunk = 4096, 256, 24, 512
+    A = np.asarray(np.random.default_rng(11).standard_normal((m, n)),
+                   np.float32)
+    src = ArraySource(A, chunk)
+    key = jax.random.key(3)
+    jax.block_until_ready(rid_streamed(key, src, k).P)   # warm jit caches
+    with tracing(chrome=path, deep=deep) as tr:
+        jax.block_until_ready(rid_streamed(key, src, k).P)
+    chunks = m // chunk
+    h2d = sum(s.name == "stream.h2d" for s in tr.spans)
+    acc = sum(s.name == "stream.accumulate" for s in tr.spans)
+    if h2d != chunks or acc != chunks:
+        raise AssertionError(f"stream trace shape off: {h2d} h2d / {acc} "
+                             f"accumulate spans for {chunks} chunks")
+    return len(tr.spans)
+
+
+def export_serve_trace(path: str, *, deep: bool = False) -> int:
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serving import GenerationRequest, ServeEngine
+
+    cfg = get_smoke_config("granite_3_2b").replace(dtype="float32")
+    params = init_params(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                      prefill_chunk_tokens=8)
+    for i in range(3):
+        prompt = (np.arange(4 + 13 * i) % cfg.vocab_size).astype(np.int32)
+        eng.submit(GenerationRequest(request_id=i, prompt=prompt,
+                                     max_new_tokens=4))
+    with tracing(chrome=path, deep=deep) as tr:
+        done = eng.run()
+    if len(done) != 3:
+        raise AssertionError(f"serve trace run incomplete: {len(done)}/3")
+    if not any(s.name == "serve.decode" for s in tr.spans):
+        raise AssertionError("serve trace has no decode spans")
+    return len(tr.spans)
+
+
+def _validate(path: str):
+    with open(path) as f:
+        payload = json.load(f)
+    ev = payload["traceEvents"]
+    assert any(e["ph"] == "X" for e in ev), f"{path}: no complete events"
+    for e in ev:
+        assert e["ph"] in ("M", "X", "i", "C"), f"{path}: bad ph {e!r}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "traces"))
+    ap.add_argument("--deep", action="store_true",
+                    help="deep tracing: block per phase for true device "
+                         "times (serializes the stream pipeline)")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    for name, fn in (("stream_trace.json", export_stream_trace),
+                     ("serve_trace.json", export_serve_trace)):
+        path = os.path.join(args.out, name)
+        nspans = fn(path, deep=args.deep)
+        _validate(path)
+        print(f"wrote {path} ({nspans} spans)")
+
+
+if __name__ == "__main__":
+    main()

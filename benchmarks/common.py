@@ -1,9 +1,15 @@
 """Shared benchmark utilities: robust timing, CSV emission, and the
 jax-version-spanning ``compiled.cost_analysis()`` normalization every
-lowering-based bench needs."""
+lowering-based bench needs.
+
+Timing goes through the observability layer: ``time_fn`` brackets each
+iteration with an obs span (``bench.iter``) read off the sanctioned
+clock, so measured wall times land in the SAME trace stream as the
+library's own spans when a tracer is active — and BENCH_scaling.json's
+``wall_s`` column is obs-measured by construction.
+"""
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import json
@@ -15,6 +21,8 @@ import jax
 # lowering-based bench (scaling_worker, bench_qr's fused sweep) keeps one
 # import site for its utilities.
 from repro.compat import normalize_cost_analysis  # noqa: F401
+from repro.obs import trace as obs_trace
+from repro.obs.clock import MONOTONIC
 
 
 def append_json_rows(path: str, rows: list[dict]) -> None:
@@ -31,15 +39,24 @@ def append_json_rows(path: str, rows: list[dict]) -> None:
         json.dump(existing + rows, f, indent=1)
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall seconds of ``fn(*args)`` (blocks on all outputs)."""
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            label: str = "bench.iter") -> float:
+    """Median wall seconds of ``fn(*args)`` (blocks on all outputs).
+
+    Each timed iteration is an obs span named ``label`` whose attrs
+    carry the measured seconds — under ``repro.obs.tracing`` the bench
+    iterations appear in the exported trace; with no tracer the spans
+    are shared no-ops and only the clock reads remain."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
+    for i in range(iters):
+        with obs_trace.span(label, iter=i) as sp:
+            t0 = MONOTONIC()
+            jax.block_until_ready(fn(*args))
+            dt = MONOTONIC() - t0
+            sp.set(seconds=dt)
+        ts.append(dt)
     ts.sort()
     return ts[len(ts) // 2]
 

@@ -63,13 +63,50 @@ def main():
         for impl in ("blocked", "panel_parallel"):
             bench_scaling.main(["--procs", "4,8,16", "--rows", "1",
                                 "--weak", "--exec", "--qr-impl", impl, *js])
+        section("Strong scaling, executed: measured wall vs roofline model")
+        bench_scaling.main(["--procs", "4,8", "--rows", "1", "--exec", *js])
         if args.bench_json:
             print(f"\nwrote {args.bench_json}")
+    section("Model accuracy: measured wall_s / modeled roofline seconds")
+    model_accuracy_rows(args.bench_json)
     section("Static analysis: contract findings + measured kernel residency")
     analysis_rows(args.bench_json)
     section("Roofline (from dry-run artifacts)")
     roofline.main([])
     print(f"\nbenchmarks completed in {time.time() - t0:.0f}s")
+
+
+def model_accuracy_rows(bench_json: str):
+    """Post-pass over the accumulated bench record: every row carrying
+    BOTH an obs-measured ``wall_s`` and a roofline ``model_time_s``
+    yields a ``bench = "model_accuracy"`` row with their ratio.  On this
+    CPU container the ratio is far above 1 by design — the model uses
+    TPU v5e constants — so the column tracks the CONSTANT of
+    proportionality across PRs; on real v5e hardware it should approach
+    1, closing the measured half of the speed lane."""
+    import json as _json
+    import os as _os
+
+    from .common import append_json_rows, emit
+
+    if not bench_json or not _os.path.exists(bench_json):
+        return
+    with open(bench_json) as f:
+        rows = _json.load(f)
+    acc = []
+    for r in rows:
+        wall, model = r.get("wall_s"), r.get("model_time_s")
+        if wall is None or not model or model <= 0:
+            continue
+        phase = r.get("phase") or f"rid.{r.get('mode', 'strong')}"
+        acc.append({"bench": "model_accuracy", "phase": phase,
+                    "qr_impl": r.get("qr_impl", ""),
+                    "procs": r.get("procs", 1), "m": r.get("m"),
+                    "n": r.get("n"), "wall_s": wall,
+                    "model_time_s": model, "ratio": wall / model})
+    emit(acc, "measured / modeled seconds (v5e constants on this host)")
+    if acc:
+        append_json_rows(bench_json, acc)
 
 
 def analysis_rows(bench_json: str):

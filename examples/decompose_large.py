@@ -12,7 +12,11 @@ Part 2 grows m 16x past part 1 — a ~0.4 GB f64 matrix that is NEVER
 materialized: a seeded known-spectrum generator (repro.stream.
 SpectrumSource) feeds 2048-row chunks to rid_streamed, whose peak
 device residency is O(l n + chunk) regardless of m — the paper's
-64 GB-scale path on laptop hardware.
+64 GB-scale path on laptop hardware.  The streamed decomposition runs
+under ``repro.obs.tracing``, exporting a Chrome trace-event file
+(``TRACE_OUT``, default /tmp/decompose_large_trace.json) with the
+per-chunk H2D / accumulate / gather spans and the job's eq.(3)
+certificate event — open it at https://ui.perfetto.dev.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/decompose_large.py
@@ -59,6 +63,7 @@ print(f"R stays column-sharded too (panel-parallel QR): {dec.R.sharding}")
 
 # ---- part 2: streamed, beyond a single buffer ---------------------------
 from repro.core import error_bound as eq3_bound, rid_streamed
+from repro.obs import tracing
 from repro.stream import SpectrumSource
 
 ms, ns, ks, chunk = 65536, 768, 48, 2048
@@ -67,7 +72,12 @@ src = SpectrumSource(jax.random.key(7), ms, ns, "fast_decay", ks,
 gb = ms * ns * 8 / 1e9
 print(f"\nstreamed: {ms}x{ns} f64 (~{gb:.2f} GB input, generated "
       f"{chunk}-row chunks; resident sketch only {2 * ks}x{ns})")
-sdec = rid_streamed(jax.random.key(8), src, ks)
+trace_out = os.environ.get("TRACE_OUT", "/tmp/decompose_large_trace.json")
+with tracing(chrome=trace_out) as tr:
+    sdec = rid_streamed(jax.random.key(8), src, ks)
+n_chunk_spans = sum(s.name == "stream.h2d" for s in tr.spans)
+print(f"trace: {len(tr.spans)} spans ({n_chunk_spans} H2D chunks) -> "
+      f"{trace_out} (open in ui.perfetto.dev)")
 
 # Validation-only error estimate, HOST-side and chunk-streamed like the
 # decomposition itself: power iteration on E^T E with E = A - B P, where

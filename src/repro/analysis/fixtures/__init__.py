@@ -94,6 +94,21 @@ def _host_transfer():
     return fn, (jax.ShapeDtypeStruct((8,), jnp.float32),)
 
 
+def _in_jit_timer():
+    """A span timer planted INSIDE a jit boundary: reads the (sanctioned)
+    obs clock through a callback mid-trace — exactly the instrumentation
+    mistake ``repro.obs`` exists to prevent (spans open/close in host
+    code AROUND jit).  The host-transfer rule must flag the callback, or
+    in-jit timers could land in instrumented entry points unnoticed."""
+    from ...obs.clock import now
+
+    def fn(x):
+        t = jax.pure_callback(lambda: np.float32(now()),
+                              jax.ShapeDtypeStruct((), jnp.float32))
+        return x * jnp.maximum(t, 1.0)
+    return fn, (jax.ShapeDtypeStruct((8,), jnp.float32),)
+
+
 FIXTURES = {
     "fixture.serialized-psum": EntryPoint(
         name="fixture.serialized-psum",
@@ -113,6 +128,9 @@ FIXTURES = {
         tags=("fixture",)),
     "fixture.host-transfer": EntryPoint(
         name="fixture.host-transfer", build=_host_transfer,
+        tags=("fixture",)),
+    "fixture.in-jit-timer": EntryPoint(
+        name="fixture.in-jit-timer", build=_in_jit_timer,
         tags=("fixture",)),
 }
 

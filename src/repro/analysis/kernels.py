@@ -28,7 +28,7 @@ operand/output block contributes ``prod(block_shape) * itemsize`` bytes
 — once if its index_map is grid-invariant (resident across steps), twice
 otherwise (double-buffered pipeline).  Scratch shapes count once.  With
 ``measure_residency=True`` the example also runs for real and the shared
-sampler (:mod:`repro.analysis.residency`) plus
+sampler (:mod:`repro.obs.metrics`) plus
 ``compat.normalize_cost_analysis`` record measured bytes as an ``info``
 finding next to the estimate.
 """
@@ -45,8 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import normalize_cost_analysis
+from ..obs.metrics import live_device_bytes
 from .report import Finding
-from .residency import live_device_bytes
 
 __all__ = ["kernel_packages", "check_package", "check_all_kernels",
            "capture_pallas_calls", "estimate_vmem_bytes", "PallasCapture"]

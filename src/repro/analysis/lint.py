@@ -11,10 +11,14 @@ The conventions are the repo's own (DESIGN/ROADMAP), turned into checks:
                                   state that silently changes every
                                   caller's dtypes.
   ``lint.global-clock-prng``      wall-clock calls (``time.time()`` et
-                                  al.) or global PRNG (``random.*``,
+                                  al.), ``import time`` for timing, or
+                                  global PRNG (``random.*``,
                                   ``np.random.*``) in library code;
                                   randomness flows through explicit jax
-                                  keys, clocks are injected (see
+                                  keys, clocks flow through
+                                  ``repro.obs.clock`` — the ONE
+                                  allowlisted wall-clock call site —
+                                  and are injected (see
                                   ``runtime.coordinator``'s ``clock``
                                   parameter for the sanctioned pattern).
   ``lint.string-switch``          an if/elif chain comparing one variable
@@ -41,7 +45,13 @@ from .report import Finding
 __all__ = ["lint_file", "lint_tree", "LIBRARY_DIRS"]
 
 LIBRARY_DIRS = ("core", "kernels", "stream", "models", "serving",
-                "checkpoint", "optim", "data", "runtime", "analysis")
+                "checkpoint", "optim", "data", "runtime", "analysis",
+                "obs")
+
+# The single sanctioned wall-clock call site: every other library module
+# gets its time through an injected Clock (or the ambient tracer), so
+# both the clock-call rule and the import-time rule skip exactly here.
+_CLOCK_HOME = ("obs", "clock.py")
 
 # The canonical shared-validation message prefixes (core/validate.py);
 # their reappearance elsewhere is a copy-paste of the helpers.
@@ -109,6 +119,7 @@ def lint_file(path, rel: Path) -> list:
     subject = str(rel)
     in_library = _is_library(rel)
     is_validate = rel.parts[-2:] == ("core", "validate.py")
+    is_clock_home = rel.parts[-2:] == _CLOCK_HOME
 
     for node in ast.walk(tree):
         # -- ValueError without an interpolated value ------------------
@@ -150,13 +161,14 @@ def lint_file(path, rel: Path) -> list:
                     f"line {node.lineno}: jax.config.update in library "
                     f"code mutates process-global dtype/runtime state"))
             # -- global clock / PRNG -----------------------------------
-            if chain[:2] in _CLOCK_CALLS:
+            if chain[:2] in _CLOCK_CALLS and not is_clock_home:
                 findings.append(Finding(
                     "lint.global-clock-prng", subject,
                     f"clock-{'.'.join(chain[:2])}",
                     f"line {node.lineno}: {'.'.join(chain)}() — inject a "
-                    f"clock (runtime.coordinator pattern) instead of "
-                    f"reading the wall clock in library code"))
+                    f"clock (repro.obs.clock, the runtime.coordinator "
+                    f"pattern) instead of reading the wall clock in "
+                    f"library code"))
             if chain[:2] in {("np", "random"), ("numpy", "random")} or \
                     (len(chain) == 2 and chain[0] == "random"):
                 findings.append(Finding(
@@ -172,6 +184,19 @@ def lint_file(path, rel: Path) -> list:
                         "lint.jax-config-mutation", subject, "assign",
                         f"line {node.lineno}: assigning jax.config "
                         f"attributes in library code"))
+        # -- importing the time module for timing ----------------------
+        if not is_clock_home:
+            timed = ()
+            if isinstance(node, ast.Import):
+                timed = tuple(a.name for a in node.names if a.name == "time")
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                timed = ("time",)
+            if timed:
+                findings.append(Finding(
+                    "lint.global-clock-prng", subject, "import-time",
+                    f"line {node.lineno}: imports the time module in "
+                    f"library code — timing goes through repro.obs "
+                    f"(obs.clock is the one sanctioned call site)"))
 
     if in_library:
         for lineno, var, n in _string_switch_runs(tree):

@@ -1,37 +1,14 @@
-"""The ONE device-residency measurement path, shared by the benchmarks
-and the analyzer (issue: "one measurement path, two consumers").
+"""DEPRECATED shim — the residency sampler moved to ``repro.obs.metrics``.
 
-``live_device_bytes`` is the sampler ``benchmarks/bench_stream.py`` used
-to inline; :class:`MeteredSource` wraps a ``ChunkSource`` and samples it
-at every chunk fetch — the hook runs between pipeline steps, exactly
-when both chunk buffers and the sketch accumulator coexist.  The kernel
-contract checker (``analysis.kernels``) uses the same sampler around a
-real example call to cross-check its static VMEM/HBM estimates against
-what actually materializes.
+The ONE device-residency measurement path now lives in the observability
+layer (``repro.obs.metrics.live_device_bytes`` / ``MeteredSource``),
+where the live-memory gauge, the streaming benchmarks, and the kernel
+contract checker all consume it.  This module re-exports the two names
+so existing imports keep working; new code should import from
+``repro.obs.metrics`` (or ``repro.obs``) directly.
 """
 from __future__ import annotations
 
-import jax
+from ..obs.metrics import MeteredSource, live_device_bytes  # noqa: F401
 
 __all__ = ["live_device_bytes", "MeteredSource"]
-
-
-def live_device_bytes() -> int:
-    """Total bytes of all live device arrays in this process."""
-    return sum(int(x.nbytes) for x in jax.live_arrays())
-
-
-class MeteredSource:
-    """Wrap a ChunkSource; track peak ``live_device_bytes`` across chunk
-    fetches (the streaming-RID residency meter)."""
-
-    def __init__(self, inner):
-        self._inner = inner
-        self.shape = inner.shape
-        self.dtype = inner.dtype
-        self.chunk_rows = inner.chunk_rows
-        self.peak_bytes = 0
-
-    def chunk(self, c: int):
-        self.peak_bytes = max(self.peak_bytes, live_device_bytes())
-        return self._inner.chunk(c)

@@ -49,6 +49,15 @@ def run_controls() -> list:
             f"the VMEM-hostile fixture kernel produced "
             f"{[f.rule for f in bad]} but no kernels.vmem-overflow — "
             f"the estimator is vacuous"))
+
+    timer = analyze_entry(FIXTURES["fixture.in-jit-timer"])
+    if not any(f.rule == "jaxpr.host-transfer" for f in timer):
+        findings.append(Finding(
+            "controls.timer-rule-blind", "fixture.in-jit-timer",
+            "no-alarm",
+            f"the planted in-jit span timer produced "
+            f"{[f.rule for f in timer]} but no jaxpr.host-transfer — "
+            f"obs instrumentation leaking into jit would go unseen"))
     return findings
 
 
@@ -72,5 +81,6 @@ def run_all(*, controls: bool = True) -> Report:
         report.extend(run_controls())
         report.mark_pass("controls", ["fixture.serialized-psum",
                                       "fixture.overlapped-psum",
-                                      "badkernel"])
+                                      "badkernel",
+                                      "fixture.in-jit-timer"])
     return report

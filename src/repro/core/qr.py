@@ -75,6 +75,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels.panel_step import panel_step
+from ..obs import trace as obs_trace
 from .types import QRResult
 from .validate import check_panel, check_rank_bounds
 
@@ -300,6 +301,48 @@ def _panel_orthonormalize(Z: jax.Array, idx: jax.Array, Q_prev: jax.Array,
                     lambda: _panel_select_cgs2(Z, Q_prev, picked, b))
 
 
+def _fused_panel_update(Z, res2, picked, Q, piv, off: int, b: int):
+    """One panel of the fused blocked engine: select, orthonormalize
+    (``panel_step``), deflate, and fall back to adaptive per-column
+    selection on a degenerate panel.  ``off``/``b`` are static python
+    ints (the caller's loop is statically unrolled).
+
+    Shared verbatim by the jitted production loop in
+    ``blocked_pivoted_qr`` and the per-panel deep-tracing driver
+    (``_blocked_pivoted_qr_deep``) so the two paths run the SAME op
+    sequence per panel — that is what makes the traced profile an
+    honest account of the production engine.
+    """
+    dtype = Z.dtype
+    rdtype = jnp.finfo(dtype).dtype
+    _, idx = lax.top_k(res2, b)
+    idx = idx.astype(jnp.int32)
+    C = jnp.take(Z, idx, axis=1)
+    if off:                                     # block re-projection ("2"
+        C = C - Q[:, :off] @ (_h(Q[:, :off]) @ C)   # of CGS2)
+    # one VMEM pass over Z; W elided (R is recomputed at the end)
+    Qp, O, _, r2 = panel_step(C, Z, emit_w=False)
+    err = jnp.max(jnp.abs(_h(Qp) @ Qp - jnp.eye(b, dtype=dtype)))
+    ok = jnp.all(jnp.isfinite(Qp)) & \
+        (err < jnp.sqrt(jnp.finfo(rdtype).eps))
+
+    def _fallback(Z=Z, Qprev=Q[:, :off], picked=picked, b=b):
+        Qf, idxf = _panel_select_cgs2(Z, Qprev, picked, b)
+        Of = Z - Qf @ (_h(Qf) @ Z)
+        r2f = jnp.sum(jnp.abs(Of) ** 2, axis=0).astype(rdtype)
+        return Qf, idxf, Of, r2f
+
+    Qp, idx, Z, r2 = lax.cond(
+        ok, lambda Qp=Qp, idx=idx, O=O, r2=r2: (Qp, idx, O, r2),
+        _fallback)
+    picked = picked.at[idx].set(True)
+    res2 = jnp.where(picked, jnp.asarray(-1.0, rdtype),
+                     r2.astype(rdtype))
+    Q = Q.at[:, off:off + b].set(Qp)
+    piv = piv.at[off:off + b].set(idx)
+    return Z, res2, picked, Q, piv
+
+
 @partial(jax.jit, static_argnames=("k", "panel", "panel_impl",
                                    "norm_recompute"))
 def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
@@ -367,31 +410,8 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
         res2 = _masked_res2(Z, picked, rdtype)  # the ONLY full norm pass
         while off < k:                          # static unroll: k/b panels
             b = min(panel, k - off)
-            _, idx = lax.top_k(res2, b)
-            idx = idx.astype(jnp.int32)
-            C = jnp.take(Z, idx, axis=1)
-            if off:                             # block re-projection ("2"
-                C = C - Q[:, :off] @ (_h(Q[:, :off]) @ C)  # of CGS2)
-            # one VMEM pass over Z; W elided (R is recomputed at the end)
-            Qp, O, _, r2 = panel_step(C, Z, emit_w=False)
-            err = jnp.max(jnp.abs(_h(Qp) @ Qp - jnp.eye(b, dtype=dtype)))
-            ok = jnp.all(jnp.isfinite(Qp)) & \
-                (err < jnp.sqrt(jnp.finfo(rdtype).eps))
-
-            def _fallback(Z=Z, Qprev=Q[:, :off], picked=picked, b=b):
-                Qf, idxf = _panel_select_cgs2(Z, Qprev, picked, b)
-                Of = Z - Qf @ (_h(Qf) @ Z)
-                r2f = jnp.sum(jnp.abs(Of) ** 2, axis=0).astype(rdtype)
-                return Qf, idxf, Of, r2f
-
-            Qp, idx, Z, r2 = lax.cond(
-                ok, lambda Qp=Qp, idx=idx, O=O, r2=r2: (Qp, idx, O, r2),
-                _fallback)
-            picked = picked.at[idx].set(True)
-            res2 = jnp.where(picked, jnp.asarray(-1.0, rdtype),
-                             r2.astype(rdtype))
-            Q = Q.at[:, off:off + b].set(Qp)
-            piv = piv.at[off:off + b].set(idx)
+            Z, res2, picked, Q, piv = _fused_panel_update(
+                Z, res2, picked, Q, piv, off, b)
             off += b
         R = _h(Q) @ Y
         return QRResult(Q=Q, R=R, piv=piv)
@@ -407,6 +427,58 @@ def blocked_pivoted_qr(Y: jax.Array, k: int, *, panel: int = 32,
         picked = picked.at[idx].set(True)
         off += b
     R = _h(Q) @ Y
+    return QRResult(Q=Q, R=R, piv=piv)
+
+
+@partial(jax.jit, static_argnames=("off", "b"))
+def _fused_panel_step_jit(Z, res2, picked, Q, piv, off: int, b: int):
+    """Per-panel jit of the shared fused body, for the deep driver."""
+    return _fused_panel_update(Z, res2, picked, Q, piv, off, b)
+
+
+def _blocked_pivoted_qr_deep(Y: jax.Array, k: int, *, panel: int,
+                             norm_recompute) -> QRResult:
+    """Deep-tracing panel-at-a-time driver for the fused blocked engine.
+
+    The production loop lives INSIDE one jit boundary, so host timers
+    there would plant device syncs in traced code (banned by the
+    ``jaxpr.host-transfer`` analysis rule).  Under
+    ``obs.trace.deep_tracing()`` the dispatcher routes here instead: a
+    HOST python loop over per-panel jitted steps of the SAME body
+    (``_fused_panel_update``), each bracketed by a span that blocks on
+    the panel's outputs — true per-panel device timing (``qr.panel``
+    spans, ``qr.panels`` counter), at the cost of one dispatch + sync
+    per panel.  A profiling mode, never the production path: same op
+    sequence per panel means same pivots; Q/R agree with
+    ``blocked_pivoted_qr`` to fusion-level rounding
+    (tests/test_obs.py pins the parity).
+    """
+    l, n = Y.shape
+    check_rank_bounds(k, l, n)
+    check_panel(panel)
+    resolve_norm_recompute(norm_recompute)      # validated; no-op (see doc)
+    dtype = Y.dtype
+    rdtype = jnp.finfo(dtype).dtype
+    Q = jnp.zeros((l, k), dtype)
+    piv = jnp.zeros((k,), jnp.int32)
+    picked = jnp.zeros((n,), bool)
+    Z = Y
+    panels_ctr = obs_trace.counter("qr.panels")
+    with obs_trace.span("qr.blocked_deep", l=l, n=n, k=k, panel=panel):
+        res2 = _masked_res2(Z, picked, rdtype)
+        off = 0
+        while off < k:
+            b = min(panel, k - off)
+            with obs_trace.span("qr.panel", engine="blocked-fused",
+                                off=off, width=b) as sp:
+                Z, res2, picked, Q, piv = _fused_panel_step_jit(
+                    Z, res2, picked, Q, piv, off, b)
+                sp.block_on((Z, res2, Q))
+            panels_ctr.add(1)
+            off += b
+        with obs_trace.span("qr.final_r") as sp:
+            R = _h(Q) @ Y
+            sp.block_on(R)
     return QRResult(Q=Q, R=R, piv=piv)
 
 
@@ -490,14 +562,40 @@ def pivoted_qr(Y: jax.Array, k: int, *, impl: str = "blocked",
 
     (The distributed-only 'panel_parallel' engine lives in
     ``core.qr_dist`` — it needs a mesh axis, not a replicated ``Y``.)
+
+    OBSERVABILITY: when called EAGERLY (``Y`` not a jax tracer — i.e.
+    not from inside a jitted caller like ``rid``'s fused path) the
+    dispatch opens a ``qr.pivoted`` span around the engine call, and
+    under ``obs.trace.deep_tracing()`` the fused blocked engine is
+    served by the per-panel driver (``_blocked_pivoted_qr_deep``:
+    ``qr.panel`` spans with device-bracketed timing).  Inside a jit
+    trace no spans are opened — span timing there would be trace-time,
+    not runtime, and blocking on tracers is impossible.
     """
+    if impl not in ("cgs2", "blocked"):
+        raise ValueError(
+            f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")
+    eager = not isinstance(Y, jax.core.Tracer)
     if impl == "cgs2":
+        if eager:
+            with obs_trace.span("qr.pivoted", impl="cgs2", k=k) as sp:
+                out = cgs2_pivoted_qr(Y, k)
+                sp.block_on(out)
+            return out
         return cgs2_pivoted_qr(Y, k)
-    if impl == "blocked":
-        return blocked_pivoted_qr(Y, k, panel=resolve_panel(panel, k, Y.shape[0]),
-                                  panel_impl=panel_impl,
-                                  norm_recompute=norm_recompute)
-    raise ValueError(f"unknown qr impl {impl!r}; expected 'cgs2' or 'blocked'")
+    p = resolve_panel(panel, k, Y.shape[0])
+    if eager and panel_impl == "fused" and obs_trace.deep_tracing():
+        return _blocked_pivoted_qr_deep(Y, k, panel=p,
+                                        norm_recompute=norm_recompute)
+    if eager:
+        with obs_trace.span("qr.pivoted", impl="blocked", k=k, panel=p,
+                            panel_impl=panel_impl) as sp:
+            out = blocked_pivoted_qr(Y, k, panel=p, panel_impl=panel_impl,
+                                     norm_recompute=norm_recompute)
+            sp.block_on(out)
+        return out
+    return blocked_pivoted_qr(Y, k, panel=p, panel_impl=panel_impl,
+                              norm_recompute=norm_recompute)
 
 
 # ------------------------------------------------------------- analysis

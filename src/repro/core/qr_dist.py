@@ -81,6 +81,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..compat import shard_map
 from ..kernels.panel_gram import panel_gram
 from ..kernels.panel_step import panel_apply, panel_coeff
+from ..obs import trace as obs_trace
 from .qr import _h, householder_qr, resolve_norm_recompute
 from .types import QRResult
 from .validate import check_divides, check_panel, check_rank_bounds
@@ -313,6 +314,18 @@ def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
     ``QRResult(Q, R, piv)`` with ``Q``/``piv`` replicated and ``R``
     column-sharded over ``axis`` — the same contract as
     ``core.qr.pivoted_qr`` up to panel-granularity pivot order.
+
+    OBSERVABILITY: the panel loop runs inside shard_map+jit, so no host
+    timer can see individual panels without planting syncs in traced
+    code.  Instead the whole call gets ONE device-bracketed span
+    (``qr.panel_parallel``) carrying, as span events, the per-panel psum
+    schedule the cadence determines statically on the host —
+    ``psum="overlapped"`` (downdated norms, collective hides behind the
+    deflation GEMM) vs ``"serialized"`` (exact-norm recompute panel, or
+    every 'gram' panel) — plus a ``qr.recompute_panels`` counter.  Under
+    ``obs.trace.deep_tracing()`` the call is also lowered/compiled first
+    and the HLO's summed collective payload is recorded as
+    ``qr.collective_bytes`` (compile-time analysis, not a wire capture).
     """
     l, n = Y.shape
     check_rank_bounds(k, l, n, ctx="panel_parallel_pivoted_qr: ")
@@ -320,7 +333,7 @@ def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
     if panel_impl not in ("fused", "gram"):
         raise ValueError(f"panel_parallel_pivoted_qr: unknown panel_impl "
                          f"{panel_impl!r}; expected 'fused' or 'gram'")
-    resolve_norm_recompute(norm_recompute)     # eager: reject before tracing
+    recompute_every = resolve_norm_recompute(norm_recompute)  # eager reject
     ndev = mesh.shape[axis]
     check_divides(n, ndev, axis, ctx="panel_parallel_pivoted_qr: ")
 
@@ -333,7 +346,31 @@ def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,
         out_specs=(P(), P(), P(None, axis)),
         check_vma=False,
     )
-    Q, piv, R = jax.jit(mapped)(Y)
+    jitted = jax.jit(mapped)
+    with obs_trace.span("qr.panel_parallel", l=l, n=n, k=k, panel=panel,
+                        panel_impl=panel_impl, ndev=ndev) as sp:
+        if obs_trace.current_tracer() is not None:
+            recompute_ctr = obs_trace.counter("qr.recompute_panels")
+            p_i = pos = 0
+            while pos < k:                 # mirror of the loop inside jit
+                b = min(panel, k - pos)
+                p_i += 1
+                serialized = panel_impl == "gram" or bool(
+                    recompute_every and p_i % recompute_every == 0
+                    and pos + b < k)
+                sp.event("qr.panel_schedule", panel=p_i - 1, off=pos,
+                         width=b,
+                         psum="serialized" if serialized else "overlapped")
+                if serialized and panel_impl == "fused":
+                    recompute_ctr.add(1)
+                pos += b
+            if obs_trace.deep_tracing():
+                from ..launch.dryrun import collective_bytes
+                compiled = jitted.lower(Y).compile()
+                obs_trace.counter("qr.collective_bytes").add(float(sum(
+                    collective_bytes(compiled.as_text()).values())))
+        Q, piv, R = jitted(Y)
+        sp.block_on((Q, piv, R))
     return QRResult(Q=Q, R=R, piv=piv)
 
 

@@ -13,7 +13,6 @@ on a pod, ``--production`` selects the 16x16 (or 2x16x16) mesh.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +24,7 @@ from repro.data import PrefetchIterator, SyntheticConfig, batch_for_step
 from repro.launch.mesh import (make_host_mesh, make_production_mesh)
 from repro.launch.steps import (TrainConfig, init_train_state, jit_train_step,
                                 train_state_shape, train_state_shardings)
+from repro.obs.clock import now as obs_now
 from repro.optim import CompressorConfig
 from repro.runtime import Coordinator, HostFailure, StragglerMonitor
 
@@ -64,12 +64,15 @@ def train_loop(cfg, tcfg: TrainConfig, mesh, *, global_batch: int,
     losses = []
     metrics = {}
     for s in range(start, steps):
-        t0 = time.time()
-        batch = jax.device_put(batch_for_step(data_cfg, s), b_sh)
-        with mesh:
-            state, metrics = step_fn(state, batch)
+        t0 = obs_now()
+        # mon.step times the step with the obs clock and feeds this
+        # host's EWMA (straggler detection) directly — no hand-rolled
+        # time deltas.
+        with mon.step(jax.process_index()):
+            batch = jax.device_put(batch_for_step(data_cfg, s), b_sh)
+            with mesh:
+                state, metrics = step_fn(state, batch)
         coord.heartbeat(jax.process_index())
-        mon.record(jax.process_index(), time.time() - t0)
         try:
             if fail_at is not None and s == fail_at:
                 # injected failure (tests / chaos drills): a peer host died
@@ -86,7 +89,7 @@ def train_loop(cfg, tcfg: TrainConfig, mesh, *, global_batch: int,
             log(f"step {s + 1:5d}  loss {losses[-1]:.4f}  "
                 f"lr {float(metrics['lr']):.2e}  "
                 f"gnorm {float(metrics['grad_norm']):.3f}  "
-                f"{time.time() - t0:.2f}s")
+                f"{obs_now() - t0:.2f}s")
     if mgr is not None:
         mgr.save(steps, state)
         mgr.wait()

@@ -1,0 +1,26 @@
+"""Runtime observability: spans, metrics, and trace export.
+
+The measurement layer the paper's contribution implies (its result IS a
+per-phase runtime table): injectable clocks (``obs.clock`` — the one
+sanctioned wall-clock site in ``src/repro``), nested spans with
+device-bracketed timing recorded outside jit boundaries (``obs.trace``),
+counters/gauges/histograms plus the live-device-memory sampler
+(``obs.metrics``), and pluggable exporters — JSONL and Chrome/Perfetto
+trace-event JSON (``obs.export``).  See obs/README.md for the span and
+metric catalog and the viewing instructions.
+"""
+from .clock import MONOTONIC, Clock, FakeClock, MonotonicClock, now
+from .export import (ChromeTraceExporter, JsonlExporter, exporter_names,
+                     get_exporter, register_exporter)
+from .metrics import (Counter, Gauge, Histogram, MeteredSource,
+                      MetricsRegistry, live_device_bytes)
+from .trace import Span, Tracer, current_tracer, deep_tracing, tracing
+
+__all__ = [
+    "Clock", "MonotonicClock", "FakeClock", "MONOTONIC", "now",
+    "Span", "Tracer", "tracing", "current_tracer", "deep_tracing",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "live_device_bytes", "MeteredSource",
+    "JsonlExporter", "ChromeTraceExporter", "register_exporter",
+    "get_exporter", "exporter_names",
+]

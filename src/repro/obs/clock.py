@@ -1,0 +1,66 @@
+"""The repo's ONE sanctioned wall-clock source.
+
+Library code never reads ``time.perf_counter`` (or any ``time.*`` clock)
+directly — the ``lint.global-clock-prng`` rule in ``analysis/lint.py``
+bans it everywhere under ``src/repro`` EXCEPT this module, which is the
+allowlisted call site the rule points to.  Everything that needs a
+timestamp takes an injectable :class:`Clock` (defaulting to
+:data:`MONOTONIC`), so tests swap in a :class:`FakeClock` and every
+timing-dependent behavior (spans, straggler EWMAs, heartbeat timeouts)
+becomes deterministic.
+
+A clock is just a zero-argument callable returning seconds as a float;
+the classes below exist for discoverability and for the fake's control
+surface, but any ``Callable[[], float]`` satisfies the contract.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+__all__ = ["Clock", "MonotonicClock", "FakeClock", "MONOTONIC", "now"]
+
+# The contract: a zero-arg callable returning monotonic seconds.
+Clock = Callable[[], float]
+
+
+class MonotonicClock:
+    """The production clock: monotonic, high-resolution, origin-free.
+
+    This wrapper is the single place in ``src/repro`` where a ``time.*``
+    clock call is allowed (``analysis/lint.py`` enforces the allowlist).
+    """
+
+    def __call__(self) -> float:
+        return time.perf_counter()
+
+
+class FakeClock:
+    """Deterministic test clock: starts at ``start``, moves only when
+    told.  ``tick`` (default 0) auto-advances the clock by that much on
+    every read, so code that computes a duration between two reads sees
+    a stable, predictable value without any explicit ``advance`` calls.
+    """
+
+    def __init__(self, start: float = 0.0, *, tick: float = 0.0):
+        self.t = float(start)
+        self.tick = float(tick)
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"need dt >= 0 (monotonic clock), got dt={dt}")
+        self.t += dt
+
+    def __call__(self) -> float:
+        t = self.t
+        self.t += self.tick
+        return t
+
+
+# The default instance injected everywhere a caller does not supply one.
+MONOTONIC: Clock = MonotonicClock()
+
+
+def now() -> float:
+    """Read the default clock (monotonic seconds, origin-free)."""
+    return MONOTONIC()

@@ -13,12 +13,15 @@ planning logic and therefore fully testable off-cluster:
      by construction),
   3. the deterministic data pipeline replays from the restored step.
 
-The injectable ``clock`` makes failure scenarios unit-testable.
+The injectable ``clock`` makes failure scenarios unit-testable; the
+default is the sanctioned wall-clock source (``repro.obs.clock``), and
+tests inject ``repro.obs.FakeClock``.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
+
+from ..obs.clock import MONOTONIC
 
 
 class HostFailure(RuntimeError):
@@ -33,7 +36,7 @@ class Coordinator:
     is silent for longer than ``timeout_s``."""
 
     def __init__(self, n_hosts: int, *, timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = MONOTONIC):
         self.n_hosts = n_hosts
         self.timeout_s = timeout_s
         self.clock = clock

@@ -6,21 +6,50 @@ gradient-compression rank drops one tier (less traffic through the slow
 host's links) — see DESIGN.md section 5.  Tiers are static ranks so each
 tier is a separately-compiled train_step; the loop swaps functions, never
 recompiles mid-tier.
+
+Two stability details matter in production:
+
+* the fleet median is the TRUE median (mean of the two middle EWMAs for
+  an even host count) — the upper-middle shortcut biases the reference
+  high on small fleets, hiding a genuine straggler behind it;
+* tier RECOVERY is hysteretic: the rank climbs back only after
+  ``recovery_steps`` consecutive clear ``adapt()`` checks.  Dropping a
+  tier is cheap (less traffic, slightly worse compression); flapping
+  between pre-compiled step functions every other step is not.
+
+Timing feeds through the observability layer: ``step(host)`` returns a
+context manager that brackets one training step with the obs clock
+(``repro.obs.clock`` — the sanctioned wall-clock source), records the
+elapsed seconds into the host's EWMA, and observes it into the ambient
+``runtime.step_seconds`` histogram when a tracer is active.  Callers
+therefore never hand-compute ``time.time()`` deltas.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence
+
+from ..obs import trace as obs_trace
+from ..obs.clock import MONOTONIC, Clock
 
 
 class StragglerMonitor:
     def __init__(self, n_hosts: int, *, alpha: float = 0.2,
                  threshold: float = 1.5,
-                 rank_tiers: Sequence[int] = (32, 16, 8, 4)):
+                 rank_tiers: Sequence[int] = (32, 16, 8, 4),
+                 recovery_steps: int = 3,
+                 clock: Clock = MONOTONIC):
+        if recovery_steps < 1:
+            raise ValueError(f"need recovery_steps >= 1, got "
+                             f"{recovery_steps}")
         self.n_hosts = n_hosts
         self.alpha = alpha
         self.threshold = threshold
         self.rank_tiers = tuple(rank_tiers)
+        self.recovery_steps = recovery_steps
+        self._clock = clock
         self._tier = 0
+        self._clear_streak = 0
         self._ewma: dict[int, float] = {}
 
     def record(self, host: int, step_seconds: float):
@@ -28,12 +57,29 @@ class StragglerMonitor:
         self._ewma[host] = (step_seconds if prev is None
                             else (1 - self.alpha) * prev + self.alpha * step_seconds)
 
+    @contextlib.contextmanager
+    def step(self, host: int):
+        """Time one training step with the obs clock and feed the host's
+        EWMA (plus the ambient ``runtime.step_seconds`` histogram when a
+        tracer is active).  The timed region is host wall time — bracket
+        the synced step call, not an async dispatch."""
+        t0 = self._clock()
+        try:
+            yield
+        finally:
+            dt = self._clock() - t0
+            self.record(host, dt)
+            obs_trace.histogram("runtime.step_seconds").observe(dt)
+
     @property
     def fleet_median(self) -> Optional[float]:
         if not self._ewma:
             return None
         vals = sorted(self._ewma.values())
-        return vals[len(vals) // 2]
+        mid = len(vals) // 2
+        if len(vals) % 2:
+            return vals[mid]
+        return 0.5 * (vals[mid - 1] + vals[mid])
 
     def stragglers(self) -> list[int]:
         med = self.fleet_median
@@ -46,12 +92,19 @@ class StragglerMonitor:
         return self.rank_tiers[self._tier]
 
     def adapt(self) -> bool:
-        """Drop one rank tier if stragglers persist.  Returns True when the
-        tier changed (caller swaps to the pre-compiled step fn)."""
-        if self.stragglers() and self._tier + 1 < len(self.rank_tiers):
-            self._tier += 1
-            return True
-        if not self.stragglers() and self._tier > 0:
+        """Drop one rank tier if stragglers persist; climb back one tier
+        only after ``recovery_steps`` consecutive clear checks
+        (hysteresis).  Returns True when the tier changed (caller swaps
+        to the pre-compiled step fn)."""
+        if self.stragglers():
+            self._clear_streak = 0
+            if self._tier + 1 < len(self.rank_tiers):
+                self._tier += 1
+                return True
+            return False
+        self._clear_streak += 1
+        if self._tier > 0 and self._clear_streak >= self.recovery_steps:
             self._tier -= 1
+            self._clear_streak = 0
             return True
         return False

@@ -17,6 +17,18 @@ Design (vLLM-shaped, sized for the assignment's decode cells):
 The engine is deliberately synchronous/single-host here; the step
 functions it drives are the sharded ones from ``launch.steps``, so the
 same loop runs on a pod by swapping the mesh.
+
+OBSERVABILITY (``repro.obs``): under an active tracer, ``run()`` opens a
+``serve.run`` root span and each loop iteration records a
+``serve.admit`` span (one ``serve.prefill`` child per one-shot
+admission), one ``serve.prefill_chunk`` span per in-flight chunked
+prefill advanced, and one ``serve.decode`` span per shared decode step
+(the decode span's close is an honest device time — the step's argmax
+already syncs on the logits).  Two gauges sample once per iteration:
+``serve.queue_depth`` (waiting requests) and ``serve.slot_occupancy``
+(active + prefilling slots, of ``max_batch``).  All spans open and
+close in HOST code around the jitted step calls — nothing is added
+inside a jit boundary, and with no tracer every hook is a shared no-op.
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ import numpy as np
 from ..models.config import ModelConfig
 from ..models.transformer import (decode_step, init_caches, prefill,
                                   prefill_chunk, supports_chunked_prefill)
+from ..obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -124,21 +137,31 @@ class ServeEngine:
         the rest of the batch run in between.
         """
         free = self._free_slots()
-        while free and self._queue:
-            req = self._queue.pop(0)
-            chunk = self.prefill_chunk_tokens
-            if chunk is not None and len(req.prompt) > chunk:
-                slot = free.pop(0)
-                self._prefilling[slot] = {
-                    "req": req, "consumed": 0,
-                    "caches": init_caches(self.cfg, 1, self.max_len)}
-                continue
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, caches1 = self._prefill_one(self.params, toks)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            slot = free[0]
-            if self._install(slot, req, caches1, nxt):
-                free.pop(0)
+        if not (free and self._queue):
+            return
+        with obs_trace.span("serve.admit", waiting=len(self._queue),
+                            free_slots=len(free)):
+            while free and self._queue:
+                req = self._queue.pop(0)
+                chunk = self.prefill_chunk_tokens
+                if chunk is not None and len(req.prompt) > chunk:
+                    slot = free.pop(0)
+                    obs_trace.event("serve.slot_reserved",
+                                    request_id=req.request_id, slot=slot,
+                                    prompt_tokens=len(req.prompt))
+                    self._prefilling[slot] = {
+                        "req": req, "consumed": 0,
+                        "caches": init_caches(self.cfg, 1, self.max_len)}
+                    continue
+                with obs_trace.span("serve.prefill",
+                                    request_id=req.request_id,
+                                    prompt_tokens=len(req.prompt)):
+                    toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                    logits, caches1 = self._prefill_one(self.params, toks)
+                    nxt = int(jnp.argmax(logits[0, -1]))
+                slot = free[0]
+                if self._install(slot, req, caches1, nxt):
+                    free.pop(0)
 
     def _step_prefill(self):
         """Advance every in-flight chunked prefill by ONE chunk (the
@@ -148,9 +171,15 @@ class ServeEngine:
         for slot, st in list(self._prefilling.items()):
             req, consumed = st["req"], st["consumed"]
             end = min(consumed + self.prefill_chunk_tokens, len(req.prompt))
-            toks = jnp.asarray(req.prompt[consumed:end], jnp.int32)[None, :]
-            logits, st["caches"] = self._prefill_chunk(
-                self.params, toks, consumed, st["caches"])
+            with obs_trace.span("serve.prefill_chunk",
+                                request_id=req.request_id, slot=slot,
+                                start=consumed, end=end) as sp:
+                toks = jnp.asarray(req.prompt[consumed:end],
+                                   jnp.int32)[None, :]
+                logits, st["caches"] = self._prefill_chunk(
+                    self.params, toks, consumed, st["caches"])
+                if obs_trace.deep_tracing():
+                    sp.block_on(logits)
             st["consumed"] = end
             if end == len(req.prompt):
                 del self._prefilling[slot]
@@ -163,10 +192,15 @@ class ServeEngine:
             return
         # One shared decode step at per-slot positions (continuous
         # batching); inactive slots compute-but-discard.
-        toks = jnp.asarray(self._last_tok)
-        logits, self._caches = self._decode(
-            self.params, toks, jnp.asarray(self._pos, jnp.int32), self._caches)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), dtype=np.int32)
+        with obs_trace.span("serve.decode", active=len(self._active)):
+            toks = jnp.asarray(self._last_tok)
+            logits, self._caches = self._decode(
+                self.params, toks, jnp.asarray(self._pos, jnp.int32),
+                self._caches)
+            # the argmax transfer below syncs, so the span close is an
+            # honest device time for the step
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1),
+                             dtype=np.int32)
         for slot, req in list(self._active.items()):
             tok = int(nxt[slot])
             req.output.append(tok)
@@ -184,11 +218,24 @@ class ServeEngine:
         Each iteration: admit, ONE prefill chunk per in-flight long
         prompt, ONE shared decode step — so chunked prefills and decode
         interleave instead of serializing."""
+        tracer = obs_trace.current_tracer()
+        queue_gauge = obs_trace.gauge("serve.queue_depth")
+        occ_gauge = obs_trace.gauge("serve.slot_occupancy")
         steps = 0
-        while (self._queue or self._active or self._prefilling) \
-                and steps < max_steps:
-            self._admit()
-            self._step_prefill()
-            self._step_decode()
-            steps += 1
+        with obs_trace.span("serve.run", max_batch=self.max_batch,
+                            submitted=len(self._all)) as root:
+            while (self._queue or self._active or self._prefilling) \
+                    and steps < max_steps:
+                if tracer is not None:
+                    queue_gauge.set(len(self._queue))
+                    occ_gauge.set(len(self._active) + len(self._prefilling))
+                self._admit()
+                self._step_prefill()
+                self._step_decode()
+                steps += 1
+            if tracer is not None:
+                queue_gauge.set(len(self._queue))
+                occ_gauge.set(len(self._active) + len(self._prefilling))
+                root.set(steps=steps,
+                         completed=sum(r.done for r in self._all))
         return [r for r in self._all if r.done]

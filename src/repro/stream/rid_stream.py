@@ -43,6 +43,21 @@ in-memory ``rid`` for the same PRNG key.  Three pieces make that true:
 
 Only the ``gaussian`` sketch streams: srft/srht mix ALL ``m`` rows
 through an FFT/FWHT, so a row chunk cannot be sketched independently.
+
+OBSERVABILITY (``repro.obs``): under an ambient tracer the pipeline
+records one ``rid_streamed`` root span with per-chunk children —
+``stream.h2d`` / ``stream.accumulate`` for pass 1 and ``stream.gather``
+for pass 2 — plus ``stream.h2d_bytes`` / ``stream.chunks`` counters, a
+``device.live_bytes`` gauge sampled at every chunk boundary, and a
+final ``eq3.certificate`` event carrying the paper's eq.(3) bound for
+this (m, n, k), so one trace is simultaneously a perf profile and a
+correctness record.  All spans open/close in THIS host loop, outside
+the jit boundaries (the registered analysis entry's jaxpr is
+instrumentation-free — ``jaxpr.host-transfer`` re-proves it in CI).
+Under normal tracing the per-chunk spans time DISPATCH (no added syncs:
+the double-buffered schedule is preserved, ``sync=False`` on the span);
+deep tracing (``tracing(deep=True)``) blocks on each phase for true
+per-chunk device timing at the cost of serializing the pipeline.
 """
 from __future__ import annotations
 
@@ -57,6 +72,8 @@ from ..core.sketch import finalize_gaussian_sketch, gaussian_omega_cols
 from ..core.types import IDResult
 from ..core.validate import check_l_ge_k, check_rank_bounds
 from ..kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
+from ..obs import trace as obs_trace
+from ..obs.metrics import live_device_bytes
 from .chunks import ChunkSource, chunk_bounds, num_chunks
 
 __all__ = ["rid_streamed"]
@@ -133,34 +150,80 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
     check_l_ge_k(l, k)
     check_rank_bounds(k, l, n)
 
-    # ---- pass 1: double-buffered sketch accumulation -------------------
-    C = num_chunks(source)
-    nxt = jax.device_put(_checked_chunk(source, 0))
-    acc = None
-    for c in range(C):
-        cur = nxt
-        r0, r1 = chunk_bounds(source, c)
-        omega_c = gaussian_omega_cols(key, r0, r1, l, dtype)
-        acc = sketch_accum(omega_c, cur, acc)     # async accumulate, chunk c
-        if not overlap:
-            jax.block_until_ready(acc)
-        if c + 1 < C:                             # H2D of c+1 rides the GEMM
-            nxt = jax.device_put(_checked_chunk(source, c + 1))
-    Y = finalize_gaussian_sketch(acc, l, dtype)
+    tracer = obs_trace.current_tracer()
+    deep = obs_trace.deep_tracing()
+    chunks_ctr = obs_trace.counter("stream.chunks")
+    h2d_ctr = obs_trace.counter("stream.h2d_bytes")
+    live_gauge = obs_trace.gauge("device.live_bytes")
 
-    # ---- steps 2-3: identical jit boundary to the in-memory path -------
-    P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel, qr_norm_recompute)
-    P = _cast_interp(P, dtype)
+    with obs_trace.span("rid_streamed", m=m, n=n, k=k, l=l,
+                        chunk_rows=chunk_rows, overlap=overlap,
+                        dtype=str(dtype)):
+        # ---- pass 1: double-buffered sketch accumulation ---------------
+        C = num_chunks(source)
+        with obs_trace.span("stream.pass1", chunks=C) as p1:
+            with obs_trace.span("stream.h2d", chunk=0, sync=deep) as sp:
+                nxt = jax.device_put(_checked_chunk(source, 0))
+                h2d_ctr.add(int(nxt.nbytes))
+                if deep:
+                    sp.block_on(nxt)
+            acc = None
+            for c in range(C):
+                cur = nxt
+                if tracer is not None:
+                    live_gauge.set(live_device_bytes())
+                r0, r1 = chunk_bounds(source, c)
+                with obs_trace.span("stream.accumulate", chunk=c,
+                                    rows=r1 - r0,
+                                    sync=deep or not overlap) as sp:
+                    omega_c = gaussian_omega_cols(key, r0, r1, l, dtype)
+                    acc = sketch_accum(omega_c, cur, acc)   # async, chunk c
+                    if not overlap:
+                        jax.block_until_ready(acc)
+                    elif deep:                   # deep tracing: true device
+                        sp.block_on(acc)         # timing, serializes the buf
+                if c + 1 < C:                    # H2D of c+1 rides the GEMM
+                    with obs_trace.span("stream.h2d", chunk=c + 1,
+                                        sync=deep) as sp:
+                        nxt = jax.device_put(_checked_chunk(source, c + 1))
+                        h2d_ctr.add(int(nxt.nbytes))
+                        if deep:
+                            sp.block_on(nxt)
+                chunks_ctr.add(1)
+            Y = finalize_gaussian_sketch(acc, l, dtype)
+            p1.block_on(Y)
 
-    # ---- pass 2: streamed pivot-column gather B = A[:, J] --------------
-    # Re-checked per chunk: a forward-only source that misbehaves on the
-    # RE-read (chunks must be re-readable — two passes) fails with the
-    # chunk named, not an opaque numpy broadcast error.
-    J = np.asarray(piv)
-    B = np.empty((m, k), dtype=dtype)
-    for c in range(C):
-        r0, r1 = chunk_bounds(source, c)
-        B[r0:r1] = np.asarray(_checked_chunk(source, c))[:, J]
+        # ---- steps 2-3: identical jit boundary to the in-memory path ---
+        with obs_trace.span("stream.qr_interp", qr_impl=qr_impl,
+                            qr_panel=qr_panel) as sp:
+            P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel,
+                                      qr_norm_recompute)
+            P = _cast_interp(P, dtype)
+            sp.block_on((P, piv, Q, R))
+
+        # ---- pass 2: streamed pivot-column gather B = A[:, J] ----------
+        # Re-checked per chunk: a forward-only source that misbehaves on
+        # the RE-read (chunks must be re-readable — two passes) fails with
+        # the chunk named, not an opaque numpy broadcast error.
+        J = np.asarray(piv)
+        B = np.empty((m, k), dtype=dtype)
+        with obs_trace.span("stream.pass2", chunks=C):
+            for c in range(C):
+                r0, r1 = chunk_bounds(source, c)
+                with obs_trace.span("stream.gather", chunk=c, rows=r1 - r0):
+                    B[r0:r1] = np.asarray(_checked_chunk(source, c))[:, J]
+
+        # The trace doubles as a correctness record: the paper's eq.(3)
+        # residual certificate for this job, as a span event.
+        if tracer is not None:
+            from ..core.errors import error_bound
+            cert = {"m": m, "n": n, "k": k, "l": l,
+                    "bound_constant": error_bound(m, n, k)}
+            sigmas = getattr(source, "sigmas", None)
+            if sigmas is not None:
+                cert["sigma_kp1"] = float(sigmas[k])
+                cert["bound"] = cert["bound_constant"] * cert["sigma_kp1"]
+            obs_trace.event("eq3.certificate", **cert)
     return IDResult(B=B, P=P, J=piv, Q=Q, R=R)
 
 

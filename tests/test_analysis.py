@@ -57,6 +57,28 @@ def test_host_transfer_fixture_trips_host_rule():
     assert {f.key for f in fs} == {"device_put", "pure_callback"}
 
 
+def test_in_jit_timer_fixture_trips_host_rule():
+    """The obs-layer positive control: a clock read smuggled into traced
+    code via pure_callback (reading the SANCTIONED repro.obs clock, so
+    only its placement is wrong) must trip the host-transfer rule."""
+    fs = analyze_entry(FIXTURES["fixture.in-jit-timer"])
+    assert rules(fs) == ["jaxpr.host-transfer"], fs
+    assert any("pure_callback" in f.key for f in fs)
+
+
+def test_instrumented_entries_free_of_host_transfers():
+    """The obs instrumentation contract (repro.obs.trace docstring):
+    spans live in HOST code, so the traced programs of the instrumented
+    engines carry ZERO host transfers.  The in-jit-timer fixture above
+    is the positive control proving the rule would catch a violation."""
+    for ep in load_entry_points():
+        if ep.name.startswith("fixture."):
+            continue
+        bad = [f for f in analyze_entry(ep)
+               if f.rule == "jaxpr.host-transfer"]
+        assert bad == [], (ep.name, bad)
+
+
 def test_f64_leak_fixture_trips_dtype_rule(subproc):
     # f64 avals only exist under x64 — the env the CI analyze job uses.
     r = subproc("""
@@ -204,6 +226,25 @@ def test_lint_rules_scoped_to_library_dirs(tmp_path):
     got = rules(lint_file(p, pathlib.Path("launch/bad.py")))
     # behavioral rules don't apply to launch/; message rules still do
     assert got == ["lint.duplicate-validation", "lint.valueerror-no-value"]
+
+
+def test_lint_clock_rule_allowlists_obs_clock_home(tmp_path):
+    """obs/clock.py is the ONE file allowed to import time and call
+    time.* clocks; identical source anywhere else in a library dir trips
+    lint.global-clock-prng (both the call and the import check)."""
+    src = ("import time\n\n"
+           "def now():\n"
+           "    return time.perf_counter()\n")
+    home = tmp_path / "obs" / "clock.py"
+    home.parent.mkdir()
+    home.write_text(src)
+    assert lint_file(home, pathlib.Path("obs/clock.py")) == []
+    stray = tmp_path / "core" / "clocky.py"
+    stray.parent.mkdir()
+    stray.write_text(src)
+    fs = lint_file(stray, pathlib.Path("core/clocky.py"))
+    assert rules(fs) == ["lint.global-clock-prng"], fs
+    assert {f.key for f in fs} == {"import-time", "clock-time.perf_counter"}
 
 
 def test_lint_clean_on_production_tree():

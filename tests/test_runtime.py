@@ -1,16 +1,9 @@
 """Fault-tolerance runtime logic (coordinator, elastic planning, stragglers)."""
 import pytest
 
+from repro.obs import FakeClock, tracing
 from repro.runtime import (Coordinator, HostFailure, StragglerMonitor,
                            plan_elastic_mesh)
-
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
 
 
 def test_coordinator_detects_silence():
@@ -55,7 +48,8 @@ def test_plan_elastic_mesh():
 
 
 def test_straggler_tiers():
-    m = StragglerMonitor(4, threshold=1.5, rank_tiers=(32, 16, 8))
+    m = StragglerMonitor(4, threshold=1.5, rank_tiers=(32, 16, 8),
+                         recovery_steps=3)
     for h in range(4):
         for _ in range(5):
             m.record(h, 1.0 if h != 2 else 2.5)
@@ -63,9 +57,62 @@ def test_straggler_tiers():
     assert m.compression_rank == 32
     assert m.adapt() is True
     assert m.compression_rank == 16
-    # straggler recovers -> tier climbs back
+    # straggler recovers -> tier climbs back only after recovery_steps
+    # consecutive clear checks (hysteresis: no tier flapping)
     for _ in range(30):
         m.record(2, 1.0)
     assert m.stragglers() == []
-    assert m.adapt() is True
+    assert m.adapt() is False
+    assert m.adapt() is False
+    assert m.compression_rank == 16
+    assert m.adapt() is True           # third clear check restores
     assert m.compression_rank == 32
+
+
+def test_straggler_true_median_even_fleet():
+    """Even host count: the reference is the MEAN of the two middle
+    EWMAs.  With hosts at (1, 1, 2, 2) the true median is 1.5; the old
+    upper-middle shortcut returned 2.0, which (threshold 1.3) hid both
+    slow hosts behind the inflated reference (2.0 < 1.3 * 2.0)."""
+    m = StragglerMonitor(4, threshold=1.3, rank_tiers=(32, 16))
+    for h, v in enumerate((1.0, 1.0, 2.0, 2.0)):
+        m.record(h, v)
+    assert m.fleet_median == pytest.approx(1.5)
+    assert m.stragglers() == [2, 3]
+
+
+def test_straggler_recovery_streak_resets():
+    """A straggler reappearing mid-streak resets the recovery counter —
+    the tier climbs back only after UNINTERRUPTED clear checks."""
+    m = StragglerMonitor(2, threshold=1.5, rank_tiers=(32, 16),
+                         recovery_steps=2)
+    m.record(0, 1.0)
+    m.record(1, 5.0)
+    assert m.adapt() is True           # drop to 16
+    for _ in range(30):
+        m.record(1, 1.0)
+    assert m.adapt() is False          # clear check 1 of 2
+    m.record(1, 50.0)                  # relapse
+    assert m.adapt() is False          # already at the last tier
+    for _ in range(40):
+        m.record(1, 1.0)
+    assert m.adapt() is False          # streak restarted: 1 of 2
+    assert m.adapt() is True           # 2 of 2 -> restore
+    assert m.compression_rank == 32
+
+
+def test_straggler_step_timer_feeds_ewma():
+    """``mon.step(host)`` brackets the step with the injected clock and
+    feeds the EWMA directly; under a tracer the durations land in the
+    ambient ``runtime.step_seconds`` histogram."""
+    clk = FakeClock()
+    m = StragglerMonitor(2, clock=clk)
+    with tracing(clock=clk) as tr:
+        with m.step(0):
+            clk.advance(2.0)
+        with m.step(1):
+            clk.advance(4.0)
+    assert m._ewma[0] == pytest.approx(2.0)
+    assert m._ewma[1] == pytest.approx(4.0)
+    h = tr.metrics.histogram("runtime.step_seconds")
+    assert h.count == 2 and h.sum == pytest.approx(6.0)

@@ -1,0 +1,129 @@
+"""Chaos lane: the streamed RID under a seeded fault plan (ISSUE 8).
+
+Two claims under test, both acceptance criteria of the fault-tolerance
+tentpole:
+
+  1. RESILIENCE IS FREE OF CORRUPTION — under a 20% transient-read
+     failure plan the pipeline completes through its RetryPolicy and the
+     output is ``np.array_equal`` to the clean run's on every IDResult
+     field (the replay guarantee survives faults, bit-for-bit);
+  2. INTERRUPTION IS SURVIVABLE — a process kill at a chunk boundary
+     plus a resume from the checkpoint directory reproduces the clean
+     bits exactly (chunk-granular checkpoint/resume).
+
+Emits ``bench = "chaos"`` rows into the BENCH_scaling.json record
+(benchmarks/run.py contract): clean vs faulted wall seconds (off the
+pipeline's own ``rid_streamed`` root span), injected fault tallies read
+straight off the FlakySource, retry/failure counters from the trace,
+and the parity verdicts.  ``--report PATH`` additionally writes the
+fault-injection report the CI chaos lane uploads as an artifact.
+
+The plan is seeded from ``$REPRO_CHAOS_SEED`` / ``$REPRO_CHAOS_P``
+(``FaultPlan.from_env``), so a failing CI chaos run reproduces locally
+by exporting the same two variables.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core import rid_streamed
+from repro.obs import tracing
+from repro.runtime import FaultPlan, FlakySource, ProcessKilled, RetryPolicy
+from repro.stream import ArraySource
+
+from .common import append_json_rows, emit
+
+
+def _root_dur(tracer, name="rid_streamed") -> float:
+    return next(s.dur for s in tracer.spans if s.name == name)
+
+
+def _fields_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("B", "P", "J", "Q", "R"))
+
+
+def chaos_run(*, m=8192, n=256, k=32, chunk_rows=512, json_path=None,
+              report_path=None):
+    A = np.asarray(np.random.default_rng(3).standard_normal((m, n)),
+                   np.float32)
+    key = jax.random.key(1)
+    src = ArraySource(A, chunk_rows)
+    plan = FaultPlan.from_env()
+
+    # clean baseline (jit caches warmed first, measure off the root span)
+    jax.block_until_ready(rid_streamed(key, src, k).P)
+    with tracing() as tr_clean:
+        ref = rid_streamed(key, src, k)
+        jax.block_until_ready(ref.P)
+
+    # 20%-transient plan through the retry policy
+    flaky = FlakySource(ArraySource(A, chunk_rows), plan)
+    pol = RetryPolicy(max_attempts=8, base_delay_s=0.001, seed=plan.seed)
+    with tracing() as tr_chaos:
+        out = rid_streamed(key, flaky, k, retry=pol)
+        jax.block_until_ready(out.P)
+    retry_parity = _fields_equal(ref, out)
+
+    # kill at a chunk boundary, then resume from the checkpoint
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        killer = FlakySource(ArraySource(A, chunk_rows),
+                             FaultPlan(seed=plan.seed, kill_at=(2,)))
+        try:
+            rid_streamed(key, killer, k, resume_dir=ckpt_dir)
+            killed = False
+        except ProcessKilled:
+            killed = True
+        resumed = rid_streamed(key, killer, k, resume_dir=ckpt_dir)
+    resume_parity = _fields_equal(ref, resumed)
+
+    row = {
+        "bench": "chaos", "m": m, "n": n, "k": k, "chunk_rows": chunk_rows,
+        "seed": plan.seed, "transient_p": plan.transient_p,
+        "injected": dict(flaky.injected),
+        "retries": tr_chaos.metrics.counter("stream.retry").value,
+        "chunk_failures":
+            tr_chaos.metrics.counter("stream.chunk_failures").value,
+        "wall_clean_s": _root_dur(tr_clean),
+        "wall_chaos_s": _root_dur(tr_chaos),
+        "kill_fired": killed,
+        "retry_parity_bit_exact": retry_parity,
+        "resume_parity_bit_exact": resume_parity,
+    }
+    emit([{kk: v for kk, v in row.items() if kk != "injected"}],
+         header=f"chaos lane: seed={plan.seed} p={plan.transient_p} "
+                f"injected={row['injected']}")
+    if json_path:
+        append_json_rows(json_path, [row])
+    if report_path:
+        with open(report_path, "w") as f:
+            json.dump({"plan": {"seed": plan.seed,
+                                "transient_p": plan.transient_p},
+                       "result": row}, f, indent=1)
+    assert row["chunk_failures"] == 0, \
+        f"retry budget exhausted {row['chunk_failures']} times"
+    assert killed, "the kill plan never fired — the harness is vacuous"
+    assert retry_parity, "faulted run diverged from the clean bits"
+    assert resume_parity, "resumed run diverged from the clean bits"
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append the chaos row to this JSON record "
+                         "(the BENCH_scaling.json contract)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the fault-injection report (CI artifact)")
+    args = ap.parse_args(argv)
+    chaos_run(json_path=args.json, report_path=args.report)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ...compat import shard_map
 from ..registry import EntryPoint, OverlapSpec
 
-__all__ = ["FIXTURES", "BAD_LINT_SRC", "BADKERNEL_BASE"]
+__all__ = ["FIXTURES", "BAD_LINT_SRC", "BAD_SLEEP_SRC", "BADKERNEL_BASE"]
 
 BADKERNEL_BASE = "repro.analysis.fixtures"
 
@@ -156,4 +156,18 @@ def bad(kind, panel):
     t0 = time.time()
     noise = np.random.standard_normal(4)
     return out, t0, noise
+'''
+
+# For the time-sleep rule's control pair: a library module that blocks
+# the host thread directly instead of waiting through an injected
+# Clock.sleep.  Linted as ``runtime/bad_sleep.py`` the rule must fire;
+# linted as ``obs/clock.py`` (the sanctioned implementation site) it
+# must stay silent.
+BAD_SLEEP_SRC = '''\
+import time
+
+
+def wait_for_chunk(delay):
+    time.sleep(delay)
+    return delay
 '''

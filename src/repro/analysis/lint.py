@@ -21,6 +21,12 @@ The conventions are the repo's own (DESIGN/ROADMAP), turned into checks:
                                   and are injected (see
                                   ``runtime.coordinator``'s ``clock``
                                   parameter for the sanctioned pattern).
+  ``lint.time-sleep``             ``time.sleep(...)`` in library code —
+                                  an untestable blocking wait; waits go
+                                  through an injected ``Clock.sleep``
+                                  (``obs.clock`` is the one sanctioned
+                                  implementation, and ``FakeClock``
+                                  makes retry/backoff tests instant).
   ``lint.string-switch``          an if/elif chain comparing one variable
                                   against >= 3 string literals — dispatch
                                   tables (``core.sketch._BACKENDS``) are
@@ -169,6 +175,13 @@ def lint_file(path, rel: Path) -> list:
                     f"clock (repro.obs.clock, the runtime.coordinator "
                     f"pattern) instead of reading the wall clock in "
                     f"library code"))
+            if chain[:2] == ("time", "sleep") and not is_clock_home:
+                findings.append(Finding(
+                    "lint.time-sleep", subject, "time.sleep",
+                    f"line {node.lineno}: time.sleep in library code is an "
+                    f"untestable blocking wait — route it through an "
+                    f"injected Clock.sleep (obs.clock owns the real one; "
+                    f"FakeClock makes retry/backoff tests instant)"))
             if chain[:2] in {("np", "random"), ("numpy", "random")} or \
                     (len(chain) == 2 and chain[0] == "random"):
                 findings.append(Finding(

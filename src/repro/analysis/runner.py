@@ -11,10 +11,13 @@ loudly if the serialization they embody goes undetected.)
 """
 from __future__ import annotations
 
+import tempfile
+from pathlib import Path
+
 from . import registry
 from .jaxpr import analyze_entry
 from .kernels import check_all_kernels, check_package
-from .lint import lint_tree
+from .lint import lint_file, lint_tree
 from .report import Finding, Report
 
 __all__ = ["run_all", "run_controls"]
@@ -58,6 +61,24 @@ def run_controls() -> list:
             f"the planted in-jit span timer produced "
             f"{[f.rule for f in timer]} but no jaxpr.host-transfer — "
             f"obs instrumentation leaking into jit would go unseen"))
+
+    from .fixtures import BAD_SLEEP_SRC
+    with tempfile.TemporaryDirectory() as td:
+        p = Path(td) / "bad_sleep.py"
+        p.write_text(BAD_SLEEP_SRC)
+        slept = lint_file(p, Path("runtime") / "bad_sleep.py")
+        clock_home = lint_file(p, Path("obs") / "clock.py")
+    if not any(f.rule == "lint.time-sleep" for f in slept):
+        findings.append(Finding(
+            "controls.sleep-rule-blind", "fixture.bad-sleep", "no-alarm",
+            f"the planted time.sleep library module produced "
+            f"{[f.rule for f in slept]} but no lint.time-sleep — "
+            f"blocking waits could dodge the injected-Clock contract"))
+    if any(f.rule == "lint.time-sleep" for f in clock_home):
+        findings.append(Finding(
+            "controls.sleep-rule-noisy", "obs/clock.py", "false-alarm",
+            "the sanctioned Clock.sleep implementation site was flagged "
+            "by lint.time-sleep — the allowlist is broken"))
     return findings
 
 
@@ -82,5 +103,6 @@ def run_all(*, controls: bool = True) -> Report:
         report.mark_pass("controls", ["fixture.serialized-psum",
                                       "fixture.overlapped-psum",
                                       "badkernel",
-                                      "fixture.in-jit-timer"])
+                                      "fixture.in-jit-timer",
+                                      "fixture.bad-sleep"])
     return report

@@ -7,8 +7,18 @@ failure handler uses.
 Format: one directory per step —
   step_000123/
     .tmp-* during write, atomically renamed when complete
-    manifest.json   — flattened key paths, shapes, dtypes
+    manifest.json   — flattened key paths, shapes, dtypes, crc32s
     <leaf-id>.npy   — one file per leaf (numpy, host-gathered)
+
+DURABILITY: the atomic rename only helps if the bytes it publishes are
+actually on disk — a crash between rename and writeback can otherwise
+leave a clean-looking directory holding truncated leaves that surface
+later as a cryptic ``np.load`` error.  ``save_pytree`` therefore fsyncs
+every leaf file and the manifest, fsyncs the tmp directory, renames,
+then fsyncs the parent directory (the rename's own durability point);
+and the manifest carries a per-leaf ``crc32`` (of the FILE bytes, read
+back after the fsync) that ``restore_pytree`` verifies before handing
+anything to ``np.load`` — torn writes fail loudly, named, at restore.
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ import os
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -31,8 +42,29 @@ def _flatten_with_names(tree) -> list[tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
+def _file_crc32(path: str) -> int:
+    """crc32 of the file's bytes, streamed (covers header + data, so a
+    truncated or torn write changes it)."""
+    crc = 0
+    with open(path, "rb") as f:
+        while block := f.read(1 << 20):
+            crc = zlib.crc32(block, crc)
+    return crc
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_pytree(directory: str, step: int, tree, *, _sync: bool = True) -> str:
-    """Write atomically: everything lands in ``.tmp-step_N`` then one rename."""
+    """Write atomically AND durably: every leaf + the manifest land in
+    ``.tmp-step_N`` and are fsynced, the tmp dir is fsynced, then ONE
+    rename publishes the step and the parent dir is fsynced (the rename
+    itself is not durable until its directory is)."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:06d}")
     tmp = os.path.join(directory, f".tmp-step_{step:06d}")
@@ -43,14 +75,23 @@ def save_pytree(directory: str, step: int, tree, *, _sync: bool = True) -> str:
     for i, (name, leaf) in enumerate(_flatten_with_names(tree)):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fn), arr)
+        leaf_path = os.path.join(tmp, fn)
+        with open(leaf_path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest[name] = {"file": fn, "shape": list(arr.shape),
-                          "dtype": str(arr.dtype)}
+                          "dtype": str(arr.dtype),
+                          "crc32": _file_crc32(leaf_path)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "leaves": manifest}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_file(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_file(directory)
     return final
 
 
@@ -63,11 +104,14 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore_pytree(directory: str, step: int, like, *,
-                   shardings=None):
+                   shardings=None, host: bool = False):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     NamedSharding — the re-shard-on-restore path; leaves are device_put
-    with the NEW sharding regardless of the mesh that wrote them."""
+    with the NEW sharding regardless of the mesh that wrote them.
+    ``host=True`` returns plain numpy leaves (no jnp canonicalization —
+    the out-of-core resume path restores f64 host state bit-for-bit
+    even when x64 is off)."""
     path = os.path.join(directory, f"step_{step:06d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)["leaves"]
@@ -81,13 +125,24 @@ def restore_pytree(directory: str, step: int, like, *,
         ent = manifest.get(name)
         if ent is None:
             raise KeyError(f"checkpoint at {path} is missing leaf {name}")
-        arr = np.load(os.path.join(path, ent["file"]))
+        leaf_path = os.path.join(path, ent["file"])
+        # Verify the FILE bytes before np.load sees them (pre-crc32
+        # checkpoints skip: nothing to verify against).
+        if "crc32" in ent and (got := _file_crc32(leaf_path)) != ent["crc32"]:
+            raise ValueError(f"{name}: checkpoint leaf {ent['file']} at "
+                             f"{path} is corrupt — file crc32 {got:#010x} "
+                             f"!= manifest crc32 {ent['crc32']:#010x} "
+                             f"(truncated or torn write)")
+        arr = np.load(leaf_path)
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{name}: checkpoint shape {arr.shape} != "
                              f"expected {leaf.shape}")
         arr = arr.astype(leaf.dtype)
-        out.append(jax.device_put(arr, shd) if shd is not None
-                   else jnp.asarray(arr))
+        if host:
+            out.append(arr)
+        else:
+            out.append(jax.device_put(arr, shd) if shd is not None
+                       else jnp.asarray(arr))
     treedef = jax.tree.structure(like)
     return jax.tree.unflatten(treedef, out)
 
@@ -130,13 +185,13 @@ class CheckpointManager:
             write()
             self.wait()
 
-    def restore_latest(self, like, *, shardings=None):
+    def restore_latest(self, like, *, shardings=None, host: bool = False):
         self.wait()
         step = latest_step(self.directory)
         if step is None:
             return None, None
         return step, restore_pytree(self.directory, step, like,
-                                    shardings=shardings)
+                                    shardings=shardings, host=host)
 
     def _gc(self):
         steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)

@@ -12,6 +12,13 @@ becomes deterministic.
 A clock is just a zero-argument callable returning seconds as a float;
 the classes below exist for discoverability and for the fake's control
 surface, but any ``Callable[[], float]`` satisfies the contract.
+
+SLEEPING is part of the same contract: code that waits (retry backoff,
+polling) calls ``clock.sleep(dt)`` on its injected clock, never
+``time.sleep`` — the ``lint.time-sleep`` rule in ``analysis/lint.py``
+bans the latter everywhere under ``src/repro`` except this module.
+``FakeClock.sleep`` just advances the fake time, so every
+backoff/timeout test runs instantly and deterministically.
 """
 from __future__ import annotations
 
@@ -34,21 +41,38 @@ class MonotonicClock:
     def __call__(self) -> float:
         return time.perf_counter()
 
+    def sleep(self, dt: float) -> None:
+        """Block for ``dt`` seconds (the one sanctioned ``time.sleep``)."""
+        if dt < 0:
+            raise ValueError(f"need dt >= 0, got dt={dt}")
+        time.sleep(dt)
+
 
 class FakeClock:
     """Deterministic test clock: starts at ``start``, moves only when
     told.  ``tick`` (default 0) auto-advances the clock by that much on
     every read, so code that computes a duration between two reads sees
     a stable, predictable value without any explicit ``advance`` calls.
+    ``sleep`` advances the fake time instead of blocking, and records
+    each requested delay in ``sleeps`` so backoff tests can assert the
+    exact schedule.
     """
 
     def __init__(self, start: float = 0.0, *, tick: float = 0.0):
         self.t = float(start)
         self.tick = float(tick)
+        self.sleeps: list = []
 
     def advance(self, dt: float) -> None:
         if dt < 0:
             raise ValueError(f"need dt >= 0 (monotonic clock), got dt={dt}")
+        self.t += dt
+
+    def sleep(self, dt: float) -> None:
+        """Advance time by ``dt`` without blocking (and log the call)."""
+        if dt < 0:
+            raise ValueError(f"need dt >= 0, got dt={dt}")
+        self.sleeps.append(float(dt))
         self.t += dt
 
     def __call__(self) -> float:

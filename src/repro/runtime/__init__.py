@@ -1,7 +1,13 @@
 """Fault-tolerance runtime: heartbeats, failure -> elastic re-mesh,
-straggler detection with adaptive compression rank."""
+straggler detection with adaptive compression rank, seeded fault
+injection + retry policies for the streamed decomposition."""
 from .coordinator import Coordinator, HostFailure, plan_elastic_mesh
+from .faults import (ChunkReadFailed, FaultPlan, FlakySource, ProcessKilled,
+                     ReadTimeout, RetryPolicy, SourceDied,
+                     TransientReadError)
 from .straggler import StragglerMonitor
 
 __all__ = ["Coordinator", "HostFailure", "plan_elastic_mesh",
-           "StragglerMonitor"]
+           "StragglerMonitor", "FaultPlan", "FlakySource", "RetryPolicy",
+           "TransientReadError", "ReadTimeout", "SourceDied",
+           "ChunkReadFailed", "ProcessKilled"]

@@ -18,6 +18,29 @@ The engine is deliberately synchronous/single-host here; the step
 functions it drives are the sharded ones from ``launch.steps``, so the
 same loop runs on a pod by swapping the mesh.
 
+GRACEFUL DEGRADATION — a multi-tenant engine must not let one tenant
+take the loop down, and must never lose track of a request:
+
+  * every request carries a TERMINAL STATUS (``done`` / ``failed`` /
+    ``evicted`` / ``timeout``) — ``run()`` accounts for every submitted
+    request on exit (a ``max_steps`` stop evicts the leftovers
+    explicitly instead of silently dropping them);
+  * per-request QUARANTINE: an exception while admitting or prefilling
+    one request (e.g. a poisoned prompt — out-of-vocab ids, wrong
+    shape/dtype, longer than the cache) marks THAT request ``failed``
+    (with the error), frees its slot, and the engine lives
+    (``serve.quarantined`` counter + ``serve.quarantine`` event);
+  * DEADLINES: ``GenerationRequest.deadline_s`` is a per-request wall
+    budget from submit, checked once per loop iteration against the
+    engine's injected obs clock (``FakeClock`` makes timeout tests
+    instant); overdue requests terminate as ``timeout`` wherever they
+    are (queued, prefilling, or decoding).  ``cancel(request_id)``
+    is the caller-driven version and terminates as ``evicted``;
+  * bounded-queue ADMISSION CONTROL: with ``max_queue`` set, ``submit``
+    SHEDS (returns False, request ``evicted``, ``serve.shed`` counter)
+    instead of queueing unboundedly — shed-rather-than-stall, the
+    back-pressure contract a load balancer can act on.
+
 OBSERVABILITY (``repro.obs``): under an active tracer, ``run()`` opens a
 ``serve.run`` root span and each loop iteration records a
 ``serve.admit`` span (one ``serve.prefill`` child per one-shot
@@ -26,14 +49,17 @@ prefill advanced, and one ``serve.decode`` span per shared decode step
 (the decode span's close is an honest device time — the step's argmax
 already syncs on the logits).  Two gauges sample once per iteration:
 ``serve.queue_depth`` (waiting requests) and ``serve.slot_occupancy``
-(active + prefilling slots, of ``max_batch``).  All spans open and
-close in HOST code around the jitted step calls — nothing is added
-inside a jit boundary, and with no tracer every hook is a shared no-op.
+(active + prefilling slots, of ``max_batch``).  Degradation events ride
+the same trace: ``serve.quarantined`` / ``serve.shed`` /
+``serve.timeout`` / ``serve.evicted`` counters with matching events.
+All spans open and close in HOST code around the jitted step calls —
+nothing is added inside a jit boundary, and with no tracer every hook
+is a shared no-op.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +69,11 @@ from ..models.config import ModelConfig
 from ..models.transformer import (decode_step, init_caches, prefill,
                                   prefill_chunk, supports_chunked_prefill)
 from ..obs import trace as obs_trace
+from ..obs.clock import MONOTONIC, Clock
+
+# The four ways a request can leave the engine.  `run()` guarantees
+# every submitted request ends in exactly one of them.
+TERMINAL_STATES = ("done", "failed", "evicted", "timeout")
 
 
 @dataclasses.dataclass
@@ -51,9 +82,16 @@ class GenerationRequest:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_token: Optional[int] = None
+    deadline_s: Optional[float] = None  # wall budget from submit, or None
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
-    done: bool = False
+    status: str = "queued"             # "queued"/"running" -> TERMINAL_STATES
+    error: Optional[str] = None        # why, for failed/evicted/timeout
+
+    @property
+    def done(self) -> bool:
+        """Completed successfully (the historical flag, now derived)."""
+        return self.status == "done"
 
 
 class ServeEngine:
@@ -61,7 +99,9 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 512,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 clock: Clock = MONOTONIC):
         if prefill_chunk_tokens is not None:
             if prefill_chunk_tokens < 1:
                 raise ValueError(f"need prefill_chunk_tokens >= 1, got "
@@ -73,16 +113,22 @@ class ServeEngine:
                     f"(needs an attention-only stack, no encdec/mrope/"
                     f"sliding window); got prefill_chunk_tokens="
                     f"{prefill_chunk_tokens}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"need max_queue >= 1 (or None for unbounded), "
+                             f"got max_queue={max_queue}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.max_queue = max_queue
+        self._clock = clock
         self._queue: list[GenerationRequest] = []
         self._all: list[GenerationRequest] = []
         self._active: dict[int, GenerationRequest] = {}   # slot -> request
         # slot -> in-flight chunked prefill: {"req", "consumed", "caches"}
         self._prefilling: dict[int, dict] = {}
+        self._deadline: dict[int, float] = {}   # request_id -> absolute t
         self._pos = np.zeros(max_batch, dtype=np.int32)
         self._caches = init_caches(cfg, max_batch, max_len)
         self._last_tok = np.zeros((max_batch, 1), dtype=np.int32)
@@ -95,9 +141,118 @@ class ServeEngine:
             lambda p, t, pos0, c: prefill_chunk(p, cfg, t, pos0, c))
 
     # ------------------------------------------------------------- intake
-    def submit(self, req: GenerationRequest):
-        self._queue.append(req)
+    def submit(self, req: GenerationRequest) -> bool:
+        """Enqueue ``req``; returns whether it was ADMITTED to the queue.
+
+        With ``max_queue`` set and the queue full, the request is shed
+        immediately (status ``evicted``, ``False`` returned) — explicit
+        back-pressure instead of an unbounded queue stalling everyone.
+        Either way the request is tracked in the engine's ledger."""
         self._all.append(req)
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._finish(req, "evicted",
+                         f"shed at submit: queue full "
+                         f"(max_queue={self.max_queue})", "serve.shed")
+            return False
+        if req.deadline_s is not None:
+            self._deadline[req.request_id] = self._clock() + req.deadline_s
+        self._queue.append(req)
+        return True
+
+    def cancel(self, request_id: int) -> bool:
+        """Terminate a queued/prefilling/active request as ``evicted``
+        (its slot frees immediately); returns whether it was found."""
+        for req in self._queue:
+            if req.request_id == request_id:
+                self._queue.remove(req)
+                self._finish(req, "evicted", "cancelled by caller",
+                             "serve.evicted")
+                return True
+        for slot, st in list(self._prefilling.items()):
+            if st["req"].request_id == request_id:
+                del self._prefilling[slot]
+                self._finish(st["req"], "evicted", "cancelled by caller",
+                             "serve.evicted")
+                return True
+        for slot, req in list(self._active.items()):
+            if req.request_id == request_id:
+                del self._active[slot]
+                self._finish(req, "evicted", "cancelled by caller",
+                             "serve.evicted")
+                return True
+        return False
+
+    # --------------------------------------------------------- bookkeeping
+    def _finish(self, req: GenerationRequest, status: str,
+                error: Optional[str] = None,
+                metric: Optional[str] = None):
+        req.status = status
+        if error is not None:
+            req.error = error
+        self._deadline.pop(req.request_id, None)
+        if metric is not None:
+            obs_trace.counter(metric).add(1)
+            obs_trace.event(metric, request_id=req.request_id,
+                            status=status, error=error)
+
+    def _quarantine(self, req: GenerationRequest, exc: Exception):
+        """A poisoned request dies alone: mark it failed (with the
+        error), leave every other slot running."""
+        self._finish(req, "failed", f"{type(exc).__name__}: {exc}",
+                     "serve.quarantined")
+
+    def _validate_prompt(self, req: GenerationRequest):
+        """Eager per-request validation at admission — the errors a
+        poisoned request would otherwise smuggle into the shared jitted
+        steps (where they would take the whole batch down or, worse,
+        silently index out of range)."""
+        p = np.asarray(req.prompt)
+        if p.ndim != 1 or p.size < 1:
+            raise ValueError(f"request {req.request_id}: prompt must be a "
+                             f"non-empty 1-D token array, got shape "
+                             f"{tuple(p.shape)}")
+        if not np.issubdtype(p.dtype, np.integer):
+            raise ValueError(f"request {req.request_id}: prompt dtype must "
+                             f"be integer token ids, got {p.dtype}")
+        lo, hi = int(p.min()), int(p.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(f"request {req.request_id}: prompt token ids "
+                             f"must lie in [0, vocab_size="
+                             f"{self.cfg.vocab_size}), got range "
+                             f"[{lo}, {hi}]")
+        if p.size > self.max_len - 1:
+            raise ValueError(f"request {req.request_id}: prompt length "
+                             f"{p.size} does not fit the cache "
+                             f"(max_len={self.max_len} incl. one generated "
+                             f"token)")
+
+    def _expire(self):
+        """Time out overdue requests wherever they are (queued,
+        prefilling, or decoding) — one clock read per sweep."""
+        if not self._deadline:
+            return
+        now = self._clock()
+
+        def overdue(req):
+            t = self._deadline.get(req.request_id)
+            return t is not None and now > t
+
+        for req in [r for r in self._queue if overdue(r)]:
+            self._queue.remove(req)
+            self._finish(req, "timeout", f"deadline_s={req.deadline_s} "
+                         f"exceeded while queued", "serve.timeout")
+        for slot, st in list(self._prefilling.items()):
+            if overdue(st["req"]):
+                del self._prefilling[slot]
+                self._finish(st["req"], "timeout",
+                             f"deadline_s={st['req'].deadline_s} exceeded "
+                             f"during chunked prefill", "serve.timeout")
+        for slot, req in list(self._active.items()):
+            if overdue(req):
+                del self._active[slot]
+                self._finish(req, "timeout", f"deadline_s={req.deadline_s} "
+                             f"exceeded after {len(req.output)} tokens",
+                             "serve.timeout")
 
     def _free_slots(self) -> list[int]:
         return [s for s in range(self.max_batch)
@@ -113,7 +268,7 @@ class ServeEngine:
         req.output.append(first_tok)
         if ((req.eos_token is not None and first_tok == req.eos_token)
                 or len(req.output) >= req.max_new_tokens):
-            req.done = True
+            self._finish(req, "done")
             return False
         # Copy the single-sequence cache into this slot of the shared
         # cache (leading dims: [pattern pos][n_super, batch, ...]).
@@ -121,6 +276,7 @@ class ServeEngine:
             lambda full, one: full.at[:, slot:slot + 1].set(
                 one.astype(full.dtype)),
             self._caches, caches1)
+        req.status = "running"
         self._active[slot] = req
         self._pos[slot] = len(req.prompt)
         self._last_tok[slot, 0] = first_tok
@@ -134,7 +290,9 @@ class ServeEngine:
         occupying a decode slot).  With ``prefill_chunk_tokens`` set,
         longer prompts only RESERVE their slot here; their prompt is
         consumed chunk-at-a-time by ``_step_prefill`` so decode steps for
-        the rest of the batch run in between.
+        the rest of the batch run in between.  A request that raises
+        anywhere in its own admission is quarantined (``failed``) and
+        the pass moves on to the next one.
         """
         free = self._free_slots()
         if not (free and self._queue):
@@ -143,48 +301,59 @@ class ServeEngine:
                             free_slots=len(free)):
             while free and self._queue:
                 req = self._queue.pop(0)
-                chunk = self.prefill_chunk_tokens
-                if chunk is not None and len(req.prompt) > chunk:
-                    slot = free.pop(0)
-                    obs_trace.event("serve.slot_reserved",
-                                    request_id=req.request_id, slot=slot,
-                                    prompt_tokens=len(req.prompt))
-                    self._prefilling[slot] = {
-                        "req": req, "consumed": 0,
-                        "caches": init_caches(self.cfg, 1, self.max_len)}
-                    continue
-                with obs_trace.span("serve.prefill",
-                                    request_id=req.request_id,
-                                    prompt_tokens=len(req.prompt)):
-                    toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                    logits, caches1 = self._prefill_one(self.params, toks)
-                    nxt = int(jnp.argmax(logits[0, -1]))
-                slot = free[0]
-                if self._install(slot, req, caches1, nxt):
-                    free.pop(0)
+                try:
+                    self._validate_prompt(req)
+                    chunk = self.prefill_chunk_tokens
+                    if chunk is not None and len(req.prompt) > chunk:
+                        slot = free.pop(0)
+                        obs_trace.event("serve.slot_reserved",
+                                        request_id=req.request_id, slot=slot,
+                                        prompt_tokens=len(req.prompt))
+                        req.status = "running"
+                        self._prefilling[slot] = {
+                            "req": req, "consumed": 0,
+                            "caches": init_caches(self.cfg, 1, self.max_len)}
+                        continue
+                    with obs_trace.span("serve.prefill",
+                                        request_id=req.request_id,
+                                        prompt_tokens=len(req.prompt)):
+                        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                        logits, caches1 = self._prefill_one(self.params,
+                                                            toks)
+                        nxt = int(jnp.argmax(logits[0, -1]))
+                    slot = free[0]
+                    if self._install(slot, req, caches1, nxt):
+                        free.pop(0)
+                except Exception as e:          # noqa: BLE001 — quarantine
+                    self._quarantine(req, e)
 
     def _step_prefill(self):
         """Advance every in-flight chunked prefill by ONE chunk (the
         fixed work quantum that bounds how long the decode batch waits).
         On the final chunk the request either completes at admit-time
-        semantics or joins the decode batch in its reserved slot."""
+        semantics or joins the decode batch in its reserved slot.  A
+        chunk that raises quarantines ITS request and frees the slot."""
         for slot, st in list(self._prefilling.items()):
             req, consumed = st["req"], st["consumed"]
             end = min(consumed + self.prefill_chunk_tokens, len(req.prompt))
-            with obs_trace.span("serve.prefill_chunk",
-                                request_id=req.request_id, slot=slot,
-                                start=consumed, end=end) as sp:
-                toks = jnp.asarray(req.prompt[consumed:end],
-                                   jnp.int32)[None, :]
-                logits, st["caches"] = self._prefill_chunk(
-                    self.params, toks, consumed, st["caches"])
-                if obs_trace.deep_tracing():
-                    sp.block_on(logits)
-            st["consumed"] = end
-            if end == len(req.prompt):
-                del self._prefilling[slot]
-                self._install(slot, req, st["caches"],
-                              int(jnp.argmax(logits[0, -1])))
+            try:
+                with obs_trace.span("serve.prefill_chunk",
+                                    request_id=req.request_id, slot=slot,
+                                    start=consumed, end=end) as sp:
+                    toks = jnp.asarray(req.prompt[consumed:end],
+                                       jnp.int32)[None, :]
+                    logits, st["caches"] = self._prefill_chunk(
+                        self.params, toks, consumed, st["caches"])
+                    if obs_trace.deep_tracing():
+                        sp.block_on(logits)
+                st["consumed"] = end
+                if end == len(req.prompt):
+                    del self._prefilling[slot]
+                    self._install(slot, req, st["caches"],
+                                  int(jnp.argmax(logits[0, -1])))
+            except Exception as e:              # noqa: BLE001 — quarantine
+                self._prefilling.pop(slot, None)
+                self._quarantine(req, e)
 
     # -------------------------------------------------------------- decode
     def _step_decode(self):
@@ -209,15 +378,19 @@ class ServeEngine:
             if ((req.eos_token is not None and tok == req.eos_token)
                     or len(req.output) >= req.max_new_tokens
                     or self._pos[slot] >= self.max_len - 1):
-                req.done = True
+                self._finish(req, "done")
                 del self._active[slot]
 
     # ----------------------------------------------------------------- run
     def run(self, max_steps: int = 10_000) -> list[GenerationRequest]:
-        """Drive until every submitted request completes (or step budget).
-        Each iteration: admit, ONE prefill chunk per in-flight long
-        prompt, ONE shared decode step — so chunked prefills and decode
-        interleave instead of serializing."""
+        """Drive until every submitted request reaches a terminal status
+        (or the step budget).  Each iteration: expire deadlines, admit,
+        ONE prefill chunk per in-flight long prompt, ONE shared decode
+        step — so chunked prefills and decode interleave instead of
+        serializing.  Hitting ``max_steps`` EVICTS whatever is still in
+        flight (named in ``error``) rather than silently dropping it;
+        the return value is every request that reached a terminal
+        status this run, whatever that status was."""
         tracer = obs_trace.current_tracer()
         queue_gauge = obs_trace.gauge("serve.queue_depth")
         occ_gauge = obs_trace.gauge("serve.slot_occupancy")
@@ -229,13 +402,27 @@ class ServeEngine:
                 if tracer is not None:
                     queue_gauge.set(len(self._queue))
                     occ_gauge.set(len(self._active) + len(self._prefilling))
+                self._expire()
                 self._admit()
                 self._step_prefill()
                 self._step_decode()
                 steps += 1
+            self._expire()
+            leftovers = (list(self._queue)
+                         + [st["req"] for st in self._prefilling.values()]
+                         + list(self._active.values()))
+            for req in leftovers:
+                self._finish(req, "evicted",
+                             f"evicted at engine stop after "
+                             f"{len(req.output)} tokens: step budget "
+                             f"max_steps={max_steps} exhausted",
+                             "serve.evicted")
+            self._queue.clear()
+            self._prefilling.clear()
+            self._active.clear()
             if tracer is not None:
-                queue_gauge.set(len(self._queue))
-                occ_gauge.set(len(self._active) + len(self._prefilling))
+                queue_gauge.set(0)
+                occ_gauge.set(0)
                 root.set(steps=steps,
                          completed=sum(r.done for r in self._all))
-        return [r for r in self._all if r.done]
+        return [r for r in self._all if r.status in TERMINAL_STATES]

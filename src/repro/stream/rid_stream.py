@@ -58,15 +58,58 @@ Under normal tracing the per-chunk spans time DISPATCH (no added syncs:
 the double-buffered schedule is preserved, ``sync=False`` on the span);
 deep tracing (``tracing(deep=True)``) blocks on each phase for true
 per-chunk device timing at the cost of serializing the pipeline.
+
+FAULT TOLERANCE — at 64 GB scale a streamed decomposition is thousands
+of chunk reads; the failure modes and their recovery paths (all
+exercised by the seeded harness in ``runtime/faults.py``):
+
+  failure mode            raised as            recovery
+  transient read error    TransientReadError   ``retry=RetryPolicy(...)``
+                                               retries with exponential
+                                               backoff + seeded jitter
+                                               (``stream.retry`` counter)
+  stalled read            ReadTimeout          the policy's elapsed-clock
+                          (via ``timeout_s``)  timeout discards the slow
+                                               read and retries
+  retry budget exhausted  ChunkReadFailed      terminal for THIS run;
+                                               ``stream.chunk_failures``
+                                               counter; resume later from
+                                               ``resume_dir``
+  source permanently dead SourceDied           terminal; resume from
+                                               ``resume_dir`` against a
+                                               replacement source with
+                                               the same fingerprint
+  process kill            (nothing to catch)   ``resume_dir`` checkpoints
+                                               survive: atomic-rename +
+                                               fsync + per-leaf crc32
+                                               (``checkpoint/store.py``)
+
+CHECKPOINT / RESUME CONTRACT: with ``resume_dir`` set, the pipeline
+persists ``(fingerprint, phase, chunks_done, acc)`` every
+``checkpoint_every`` chunks of pass 1, and ``(fingerprint, phase,
+chunks_done, P, J, Q, R, B)`` after QR + every ``checkpoint_every``
+chunks of the pass-2 gather.  Because PR 5 pinned the reduction order
+to fixed ``ACCUM_BLOCK`` blocks with per-block seeded omega, replaying
+from a checkpoint re-accumulates the SAME blocks in the SAME order onto
+the SAME saved accumulator bits — a resumed run is therefore
+BIT-FOR-BIT identical to an uninterrupted one (and to the in-memory
+``rid``), not merely close.  The fingerprint covers (m, n, k, l,
+chunk_rows, dtype, key, qr arguments, and the source's own optional
+``fingerprint()``); a checkpoint written for any other job is rejected
+eagerly with both fingerprints named.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.store import CheckpointManager, latest_step, restore_pytree
 from ..core.rid import _cast_interp, _qr_interp
 from ..core.sketch import finalize_gaussian_sketch, gaussian_omega_cols
 from ..core.types import IDResult
@@ -76,7 +119,7 @@ from ..obs import trace as obs_trace
 from ..obs.metrics import live_device_bytes
 from .chunks import ChunkSource, chunk_bounds, num_chunks
 
-__all__ = ["rid_streamed"]
+__all__ = ["rid_streamed", "source_fingerprint"]
 
 
 def _checked_chunk(source: ChunkSource, c: int):
@@ -97,16 +140,77 @@ def _checked_chunk(source: ChunkSource, c: int):
     return ch
 
 
+def source_fingerprint(key: jax.Array, source: ChunkSource, k: int, l: int,
+                       qr_impl: str, qr_panel: int,
+                       qr_norm_recompute) -> np.ndarray:
+    """The resume identity: a sha256 digest (as a (32,) uint8 array, the
+    checkpointable form) over everything that determines the output bits
+    — geometry, dtype, chunking, the PRNG key, the QR arguments, and the
+    source's own optional ``fingerprint()`` (e.g. a file path + mtime).
+    A checkpoint whose digest disagrees belongs to a DIFFERENT job and
+    resuming from it would silently mix two decompositions."""
+    m, n = source.shape
+    extra = getattr(source, "fingerprint", None)
+    extra = extra() if callable(extra) else extra
+    text = (f"m={m} n={n} k={k} l={l} chunk_rows={source.chunk_rows} "
+            f"dtype={jnp.dtype(source.dtype)} "
+            f"key={np.asarray(jax.random.key_data(key)).tobytes().hex()} "
+            f"qr={qr_impl}/{qr_panel}/{qr_norm_recompute} src={extra!r}")
+    digest = hashlib.sha256(text.encode()).digest()
+    return np.frombuffer(digest, np.uint8).copy()
+
+
+def _resume_like(resume_dir: str, step: int) -> Optional[dict]:
+    """Build the ``restore_pytree`` ``like`` tree straight from the
+    manifest of ``step`` (shapes/dtypes are self-describing; the
+    fingerprint check below is what authenticates them)."""
+    path = os.path.join(resume_dir, f"step_{step:06d}", "manifest.json")
+    with open(path) as f:
+        leaves = json.load(f)["leaves"]
+
+    def sds(name):
+        ent = leaves[f"['{name}']"]
+        return jax.ShapeDtypeStruct(tuple(ent["shape"]),
+                                    np.dtype(ent["dtype"]))
+
+    names = ["fp", "phase", "chunks_done"]
+    names += ["P", "J", "Q", "R", "B"] if "['B']" in leaves else ["acc"]
+    return {name: sds(name) for name in names}
+
+
+def _load_resume_state(resume_dir: str, fp: np.ndarray) -> Optional[dict]:
+    """Latest checkpoint in ``resume_dir`` as host numpy state, or None
+    for a fresh directory.  Rejects a fingerprint mismatch eagerly."""
+    step = latest_step(resume_dir)
+    if step is None:
+        return None
+    state = restore_pytree(resume_dir, step,
+                           _resume_like(resume_dir, step), host=True)
+    if not np.array_equal(state["fp"], fp):
+        raise ValueError(
+            f"checkpoint at {resume_dir} (step {step}) was written by a "
+            f"different job: its fingerprint "
+            f"{bytes(state['fp']).hex()[:16]}... != this job's "
+            f"{bytes(fp).hex()[:16]}... — same source/key/k/l/chunking/qr "
+            f"arguments are required for a bit-identical resume")
+    return state
+
+
 def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                  l: Optional[int] = None, sketch_kind: str = "gaussian",
                  qr_impl: str = "blocked", qr_panel: int = 32,
-                 qr_norm_recompute="auto", overlap: bool = True) -> IDResult:
+                 qr_norm_recompute="auto", overlap: bool = True,
+                 retry=None, resume_dir: Optional[str] = None,
+                 checkpoint_every: int = 1) -> IDResult:
     """Rank-``k`` randomized ID of a chunk-fed matrix: ``A ~= B @ P``.
 
     Bit-for-bit identical to ``rid(key, A, k, sketch_kind="gaussian",
     ...)`` on the materialized matrix, for every ``chunk_rows`` that is a
     multiple of ``ACCUM_BLOCK`` (module docstring) — same pivots, same
-    ``P``, same everything.
+    ``P``, same everything.  The guarantee survives interruption: a run
+    resumed from ``resume_dir`` replays the remaining chunks onto the
+    checkpointed accumulator and is bit-identical to an uninterrupted
+    run (module docstring, CHECKPOINT / RESUME CONTRACT).
 
     Args:
       key: PRNG key driving the sketch operator (same semantics as
@@ -122,6 +226,18 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
       overlap: pipeline the next chunk's host->device transfer against
         the current chunk's accumulate GEMM (default); ``False``
         serializes them (benchmark baseline).
+      retry: optional :class:`~repro.runtime.faults.RetryPolicy` — every
+        chunk read goes through it (transient errors / timeouts retry
+        with backoff through the policy's injected clock; exhaustion
+        raises ``ChunkReadFailed``).  ``None`` = fail on first error.
+      resume_dir: optional checkpoint directory.  A fresh directory
+        enables checkpointing; a directory holding a matching-fingerprint
+        checkpoint makes this call RESUME from it (both passes — pass 2
+        resumes the host-side ``B`` gather).  A checkpoint from a
+        different job (source/key/k/l/chunking/qr args) is rejected.
+      checkpoint_every: checkpoint cadence in chunks (default 1 =
+        chunk-granular; each pass-1 save materializes the accumulator,
+        so raise it to trade re-read work on resume for pipeline slack).
 
     Returns an ``IDResult`` whose ``B`` (m x k pivot columns) is
     assembled on the HOST (numpy) so device residency stays m-free;
@@ -149,69 +265,150 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
     l = 2 * k if l is None else l
     check_l_ge_k(l, k)
     check_rank_bounds(k, l, n)
+    if checkpoint_every < 1:
+        raise ValueError(f"need checkpoint_every >= 1, got "
+                         f"checkpoint_every={checkpoint_every}")
+
+    def read_chunk(c):
+        if retry is None:
+            return _checked_chunk(source, c)
+        return retry.call(lambda: _checked_chunk(source, c),
+                          description=f"source.chunk({c})")
+
+    C = num_chunks(source)
+    mgr = fp = None
+    phase, start1, start2 = 1, 0, 0
+    acc = interp = B = None
+    if resume_dir is not None:
+        fp = source_fingerprint(key, source, k, l, qr_impl, qr_panel,
+                                qr_norm_recompute)
+        mgr = CheckpointManager(resume_dir)
+        state = _load_resume_state(resume_dir, fp)
+        if state is not None:
+            phase = int(state["phase"])
+            done = int(state["chunks_done"])
+            if phase == 1:
+                start1, acc = done, jnp.asarray(state["acc"])
+            else:
+                interp = tuple(jnp.asarray(state[name])
+                               for name in ("P", "J", "Q", "R"))
+                B, start2 = state["B"], done
 
     tracer = obs_trace.current_tracer()
     deep = obs_trace.deep_tracing()
     chunks_ctr = obs_trace.counter("stream.chunks")
     h2d_ctr = obs_trace.counter("stream.h2d_bytes")
+    ckpt_ctr = obs_trace.counter("stream.checkpoints")
     live_gauge = obs_trace.gauge("device.live_bytes")
+
+    def save(step, tree):
+        # mgr.save snapshots to host synchronously (materializing the
+        # accumulator) then writes on its background thread — the disk
+        # IO rides the next chunks' GEMMs, not the pipeline.
+        with obs_trace.span("stream.checkpoint", step=step):
+            mgr.save(step, tree)
+        ckpt_ctr.add(1)
 
     with obs_trace.span("rid_streamed", m=m, n=n, k=k, l=l,
                         chunk_rows=chunk_rows, overlap=overlap,
                         dtype=str(dtype)):
-        # ---- pass 1: double-buffered sketch accumulation ---------------
-        C = num_chunks(source)
-        with obs_trace.span("stream.pass1", chunks=C) as p1:
-            with obs_trace.span("stream.h2d", chunk=0, sync=deep) as sp:
-                nxt = jax.device_put(_checked_chunk(source, 0))
-                h2d_ctr.add(int(nxt.nbytes))
-                if deep:
-                    sp.block_on(nxt)
-            acc = None
-            for c in range(C):
-                cur = nxt
-                if tracer is not None:
-                    live_gauge.set(live_device_bytes())
-                r0, r1 = chunk_bounds(source, c)
-                with obs_trace.span("stream.accumulate", chunk=c,
-                                    rows=r1 - r0,
-                                    sync=deep or not overlap) as sp:
-                    omega_c = gaussian_omega_cols(key, r0, r1, l, dtype)
-                    acc = sketch_accum(omega_c, cur, acc)   # async, chunk c
-                    if not overlap:
-                        jax.block_until_ready(acc)
-                    elif deep:                   # deep tracing: true device
-                        sp.block_on(acc)         # timing, serializes the buf
-                if c + 1 < C:                    # H2D of c+1 rides the GEMM
-                    with obs_trace.span("stream.h2d", chunk=c + 1,
-                                        sync=deep) as sp:
-                        nxt = jax.device_put(_checked_chunk(source, c + 1))
-                        h2d_ctr.add(int(nxt.nbytes))
-                        if deep:
-                            sp.block_on(nxt)
-                chunks_ctr.add(1)
-            Y = finalize_gaussian_sketch(acc, l, dtype)
-            p1.block_on(Y)
+        if resume_dir is not None and (start1 or phase == 2):
+            obs_trace.event("stream.resume", phase=phase,
+                            chunks_done=start1 if phase == 1 else start2)
+        try:
+            # ---- pass 1: double-buffered sketch accumulation -----------
+            if phase == 1:
+                with obs_trace.span("stream.pass1", chunks=C,
+                                    start=start1) as p1:
+                    if start1 < C:
+                        with obs_trace.span("stream.h2d", chunk=start1,
+                                            sync=deep) as sp:
+                            nxt = jax.device_put(read_chunk(start1))
+                            h2d_ctr.add(int(nxt.nbytes))
+                            if deep:
+                                sp.block_on(nxt)
+                    for c in range(start1, C):
+                        cur = nxt
+                        if tracer is not None:
+                            live_gauge.set(live_device_bytes())
+                        r0, r1 = chunk_bounds(source, c)
+                        with obs_trace.span("stream.accumulate", chunk=c,
+                                            rows=r1 - r0,
+                                            sync=deep or not overlap) as sp:
+                            omega_c = gaussian_omega_cols(key, r0, r1, l,
+                                                          dtype)
+                            acc = sketch_accum(omega_c, cur, acc)  # async
+                            if not overlap:
+                                jax.block_until_ready(acc)
+                            elif deep:           # deep tracing: true device
+                                sp.block_on(acc)  # timing, serializes
+                        if c + 1 < C:            # H2D of c+1 rides the GEMM
+                            with obs_trace.span("stream.h2d", chunk=c + 1,
+                                                sync=deep) as sp:
+                                nxt = jax.device_put(read_chunk(c + 1))
+                                h2d_ctr.add(int(nxt.nbytes))
+                                if deep:
+                                    sp.block_on(nxt)
+                        chunks_ctr.add(1)
+                        if mgr is not None and \
+                                ((c + 1) % checkpoint_every == 0
+                                 or c + 1 == C):
+                            save(c + 1, {"fp": fp, "phase": np.int64(1),
+                                         "chunks_done": np.int64(c + 1),
+                                         "acc": acc})
+                    Y = finalize_gaussian_sketch(acc, l, dtype)
+                    p1.block_on(Y)
 
-        # ---- steps 2-3: identical jit boundary to the in-memory path ---
-        with obs_trace.span("stream.qr_interp", qr_impl=qr_impl,
-                            qr_panel=qr_panel) as sp:
-            P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel,
-                                      qr_norm_recompute)
-            P = _cast_interp(P, dtype)
-            sp.block_on((P, piv, Q, R))
+            # ---- steps 2-3: identical jit boundary to the in-memory path
+            if interp is None:
+                with obs_trace.span("stream.qr_interp", qr_impl=qr_impl,
+                                    qr_panel=qr_panel) as sp:
+                    P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel,
+                                              qr_norm_recompute)
+                    P = _cast_interp(P, dtype)
+                    sp.block_on((P, piv, Q, R))
+            else:
+                P, piv, Q, R = interp
 
-        # ---- pass 2: streamed pivot-column gather B = A[:, J] ----------
-        # Re-checked per chunk: a forward-only source that misbehaves on
-        # the RE-read (chunks must be re-readable — two passes) fails with
-        # the chunk named, not an opaque numpy broadcast error.
-        J = np.asarray(piv)
-        B = np.empty((m, k), dtype=dtype)
-        with obs_trace.span("stream.pass2", chunks=C):
-            for c in range(C):
-                r0, r1 = chunk_bounds(source, c)
-                with obs_trace.span("stream.gather", chunk=c, rows=r1 - r0):
-                    B[r0:r1] = np.asarray(_checked_chunk(source, c))[:, J]
+            # ---- pass 2: streamed pivot-column gather B = A[:, J] ------
+            # Re-checked per chunk: a forward-only source that misbehaves
+            # on the RE-read (chunks must be re-readable — two passes)
+            # fails with the chunk named, not an opaque numpy broadcast
+            # error.
+            J = np.asarray(piv)
+            if B is None:
+                B = np.empty((m, k), dtype=dtype)
+
+            def phase2_tree(done):
+                # B is shared (not copied) with the async writer: the
+                # gather only mutates rows ABOVE `done`, and only rows
+                # up to `done` are meaningful in the snapshot.
+                return {"fp": fp, "phase": np.int64(2),
+                        "chunks_done": np.int64(done), "P": np.asarray(P),
+                        "J": J, "Q": np.asarray(Q), "R": np.asarray(R),
+                        "B": B}
+
+            if mgr is not None and phase == 1:
+                save(C + 1, phase2_tree(0))   # a pass-2 resume never
+            with obs_trace.span("stream.pass2",  # redoes pass 1 or the QR
+                                chunks=C, start=start2):
+                for c in range(start2, C):
+                    r0, r1 = chunk_bounds(source, c)
+                    with obs_trace.span("stream.gather", chunk=c,
+                                        rows=r1 - r0):
+                        B[r0:r1] = np.asarray(read_chunk(c))[:, J]
+                    if mgr is not None and \
+                            ((c + 1) % checkpoint_every == 0 or c + 1 == C):
+                        save(C + 1 + c + 1, phase2_tree(c + 1))
+        except BaseException:
+            if mgr is not None:       # a failed background write must not
+                try:                  # mask the pipeline's own failure
+                    mgr.wait()
+                except Exception:
+                    pass
+            raise
+        if mgr is not None:
+            mgr.wait()                # final checkpoint durable on return
 
         # The trace doubles as a correctness record: the paper's eq.(3)
         # residual certificate for this job, as a span event.

@@ -247,6 +247,23 @@ def test_lint_clock_rule_allowlists_obs_clock_home(tmp_path):
     assert {f.key for f in fs} == {"import-time", "clock-time.perf_counter"}
 
 
+def test_lint_time_sleep_rule_and_allowlist(tmp_path):
+    """ISSUE 8 satellite: time.sleep in a library dir trips the new
+    lint.time-sleep rule; the same source as obs/clock.py (the one
+    sanctioned Clock.sleep implementation) or under launch/ does not."""
+    from repro.analysis.fixtures import BAD_SLEEP_SRC
+    p = tmp_path / "bad_sleep.py"
+    p.write_text(BAD_SLEEP_SRC)
+    fs = lint_file(p, pathlib.Path("runtime/bad_sleep.py"))
+    assert "lint.time-sleep" in rules(fs)
+    msg = next(f for f in fs if f.rule == "lint.time-sleep").message
+    assert "Clock.sleep" in msg
+    assert "lint.time-sleep" not in rules(
+        lint_file(p, pathlib.Path("obs/clock.py")))
+    assert "lint.time-sleep" not in rules(
+        lint_file(p, pathlib.Path("launch/bad_sleep.py")))
+
+
 def test_lint_clean_on_production_tree():
     findings, files = lint_tree()
     assert len(files) > 60

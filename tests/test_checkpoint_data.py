@@ -58,6 +58,61 @@ def test_restore_missing_leaf_raises(tmp_path):
                        {"zz": jax.ShapeDtypeStruct((3,), jnp.float32)})
 
 
+def test_restore_detects_corrupt_leaf(tmp_path):
+    """Durability half of ISSUE 8: the manifest's per-leaf crc32 catches
+    a torn/truncated leaf BEFORE np.load, with the leaf named."""
+    import json
+    save_pytree(str(tmp_path), 1, {"a": jnp.arange(6, dtype=jnp.float32)})
+    step_dir = tmp_path / "step_000001"
+    leaf = json.loads((step_dir / "manifest.json").read_text()
+                      )["leaves"]["['a']"]["file"]
+    blob = (step_dir / leaf).read_bytes()
+    (step_dir / leaf).write_bytes(blob[:-2] + b"\x00\x00")   # torn write
+    with pytest.raises(ValueError, match=r"\['a'\].*corrupt.*crc32"):
+        restore_pytree(str(tmp_path), 1,
+                       {"a": jax.ShapeDtypeStruct((6,), jnp.float32)})
+
+
+def test_restore_accepts_pre_crc_checkpoints(tmp_path):
+    """Backward compat: a manifest written before the crc32 field simply
+    has nothing to verify against and restores as before."""
+    import json
+    t = {"a": jnp.arange(4, dtype=jnp.float32)}
+    save_pytree(str(tmp_path), 1, t)
+    mpath = tmp_path / "step_000001" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    for ent in manifest["leaves"].values():
+        del ent["crc32"]
+    mpath.write_text(json.dumps(manifest))
+    out = restore_pytree(str(tmp_path), 1, jax.eval_shape(lambda: t))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(4))
+
+
+def test_restore_host_preserves_f64_without_x64(tmp_path):
+    """``host=True`` returns plain numpy (no jnp canonicalization): f64
+    state restores bit-exact even with x64 off — the contract the
+    streamed-RID resume path depends on.  x64 is pinned OFF here because
+    other modules flip it at import time during collection."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    try:
+        vals = np.array([1.0 + 1e-12, np.pi], dtype=np.float64)
+        save_pytree(str(tmp_path), 1, {"acc": vals})
+        like = {"acc": jax.ShapeDtypeStruct((2,), np.float64)}
+        out = restore_pytree(str(tmp_path), 1, like, host=True)
+        assert isinstance(out["acc"], np.ndarray)
+        assert out["acc"].dtype == np.float64
+        np.testing.assert_array_equal(out["acc"], vals)
+        # the default (device) path would canonicalize f64 -> f32 here
+        assert np.asarray(restore_pytree(str(tmp_path), 1, like)
+                          ["acc"]).dtype == np.float32
+        mgr = CheckpointManager(str(tmp_path))
+        step, host_out = mgr.restore_latest(like, host=True)
+        assert step == 1 and host_out["acc"].dtype == np.float64
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
 # ------------------------------------------------------------------- data
 
 def test_data_deterministic_replay():
@@ -102,3 +157,38 @@ def test_prefetch_iterator():
     assert next(it) == 1
     with pytest.raises(RuntimeError):
         next(it)
+
+
+def test_prefetch_close_unblocks_worker():
+    """ISSUE 8 satellite: an abandoned prefetcher whose worker is BLOCKED
+    on a full queue joins promptly on close() instead of leaking the
+    thread (and the source it pins) for the life of the process."""
+    released = threading.Event()
+
+    def infinite():
+        try:
+            i = 0
+            while True:
+                yield i
+                i += 1
+        finally:
+            released.set()                 # generator actually collected
+
+    it = PrefetchIterator(infinite(), depth=1)
+    assert next(it) == 0                   # worker now re-blocked on put
+    it.close()
+    assert not it._t.is_alive()
+    assert released.wait(timeout=2.0)
+    with pytest.raises(StopIteration):     # closed iterator is exhausted
+        next(it)
+    it.close()                             # idempotent
+
+
+def test_prefetch_context_manager_closes():
+    with PrefetchIterator(iter(range(100)), depth=1) as it:
+        assert next(it) == 0
+    assert not it._t.is_alive()
+    # closing after natural exhaustion is also fine
+    with PrefetchIterator(iter(range(3)), depth=2) as it2:
+        assert list(it2) == [0, 1, 2]
+    assert not it2._t.is_alive()

@@ -1,0 +1,189 @@
+"""Seeded fault injection + retry policy (ISSUE 8 tentpole).
+
+The harness is deterministic by construction (every decision folds a
+jax key with (chunk, attempt)), so each test pins exact behavior — what
+fired, how often, and what the retries cost — against a FakeClock.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.obs import FakeClock, tracing
+from repro.runtime import (ChunkReadFailed, FaultPlan, FlakySource,
+                           ProcessKilled, ReadTimeout, RetryPolicy,
+                           SourceDied, TransientReadError)
+from repro.runtime.faults import CHAOS_P_ENV, CHAOS_SEED_ENV
+from repro.stream import ArraySource
+
+
+def _source(m=96, n=8, chunk_rows=32, seed=0):
+    rows = np.arange(m * n, dtype=np.float32).reshape(m, n) + seed
+    return ArraySource(rows, chunk_rows)
+
+
+# ------------------------------------------------------------- FaultPlan
+
+def test_fault_plan_validation_and_env(monkeypatch):
+    with pytest.raises(ValueError, match=r"transient_p=1\.0"):
+        FaultPlan(transient_p=1.0)
+    monkeypatch.setenv(CHAOS_SEED_ENV, "7")
+    monkeypatch.setenv(CHAOS_P_ENV, "0.35")
+    plan = FaultPlan.from_env()
+    assert plan.seed == 7 and plan.transient_p == pytest.approx(0.35)
+    monkeypatch.delenv(CHAOS_SEED_ENV)
+    monkeypatch.delenv(CHAOS_P_ENV)
+    assert FaultPlan.from_env() == FaultPlan(seed=0, transient_p=0.2)
+
+
+def test_fault_plan_is_deterministic_per_seed():
+    a = FaultPlan(seed=3, transient_p=0.4)
+    b = FaultPlan(seed=3, transient_p=0.4)
+    grid = [(c, t) for c in range(20) for t in range(4)]
+    hits_a = [a.transient_hits(c, t) for c, t in grid]
+    assert hits_a == [b.transient_hits(c, t) for c, t in grid]
+    assert any(hits_a) and not all(hits_a)     # p=0.4 really does both
+    c = FaultPlan(seed=4, transient_p=0.4)
+    assert hits_a != [c.transient_hits(ch, t) for ch, t in grid]
+
+
+def test_fault_plan_explicit_overrides_beat_probability():
+    plan = FaultPlan(transient={2: 3})          # chunk 2: 3 leading failures
+    assert [plan.transient_hits(2, t) for t in range(4)] == \
+        [True, True, True, False]
+    assert not plan.transient_hits(1, 0)
+
+
+# ----------------------------------------------------------- FlakySource
+
+def test_flaky_source_delegates_geometry_and_healthy_reads():
+    inner = _source()
+    flaky = FlakySource(inner, FaultPlan())
+    assert (flaky.shape, flaky.dtype, flaky.chunk_rows) == \
+        (inner.shape, inner.dtype, inner.chunk_rows)
+    np.testing.assert_array_equal(np.asarray(flaky.chunk(1)),
+                                  np.asarray(inner.chunk(1)))
+    assert flaky.injected == {"transient": 0, "stall": 0, "dead": 0,
+                              "kill": 0}
+
+
+def test_flaky_source_kill_fires_once_then_reads_fine():
+    flaky = FlakySource(_source(), FaultPlan(kill_at=(1,)))
+    flaky.chunk(0)
+    with pytest.raises(ProcessKilled):
+        flaky.chunk(1)
+    np.testing.assert_array_equal(np.asarray(flaky.chunk(1)),
+                                  np.asarray(_source().chunk(1)))
+    assert flaky.injected["kill"] == 1
+
+
+def test_flaky_source_death_is_permanent_from_die_at():
+    flaky = FlakySource(_source(), FaultPlan(die_at=1))
+    flaky.chunk(0)
+    for c in (1, 2, 1):                        # no retry can ever win
+        with pytest.raises(SourceDied, match="died at chunk 1"):
+            flaky.chunk(c)
+    assert flaky.injected["dead"] == 3
+
+
+def test_flaky_source_stall_via_injected_clock():
+    clk = FakeClock()
+    flaky = FlakySource(_source(), FaultPlan(stall_s={2: 7.5}), clock=clk)
+    flaky.chunk(2)
+    assert clk.sleeps == [7.5]                 # first read stalls...
+    flaky.chunk(2)
+    assert clk.sleeps == [7.5]                 # ...re-reads don't
+    assert flaky.injected["stall"] == 1
+
+
+def test_flaky_source_transient_counts_attempts_per_chunk():
+    flaky = FlakySource(_source(), FaultPlan(transient={0: 2}))
+    for _ in range(2):
+        with pytest.raises(TransientReadError):
+            flaky.chunk(0)
+    flaky.chunk(0)                             # third attempt wins
+    assert flaky.injected["transient"] == 2
+
+
+# ----------------------------------------------------------- RetryPolicy
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts=0"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="base_delay_s=-1"):
+        RetryPolicy(base_delay_s=-1)
+    with pytest.raises(ValueError, match="jitter=-0.1"):
+        RetryPolicy(jitter=-0.1)
+
+
+def test_retry_backoff_is_exponential_capped_and_jittered():
+    pol = RetryPolicy(base_delay_s=1.0, max_delay_s=4.0, jitter=0.0)
+    assert [pol.backoff_s(a) for a in range(4)] == [1.0, 2.0, 4.0, 4.0]
+    jit = RetryPolicy(base_delay_s=1.0, max_delay_s=4.0, jitter=0.5, seed=9)
+    d = jit.backoff_s(0)
+    assert 1.0 <= d < 1.5
+    # seeded: a fresh policy with the same seed replays the same draws
+    assert RetryPolicy(base_delay_s=1.0, max_delay_s=4.0, jitter=0.5,
+                       seed=9).backoff_s(0) == d
+
+
+def test_retry_wins_through_transients_and_meters_the_cost():
+    clk = FakeClock()
+    flaky = FlakySource(_source(), FaultPlan(transient={0: 2}), clock=clk)
+    pol = RetryPolicy(max_attempts=4, base_delay_s=0.1, jitter=0.0,
+                      clock=clk)
+    with tracing(clock=clk) as tr:
+        out = pol.call(lambda: flaky.chunk(0), description="source.chunk(0)")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(_source().chunk(0)))
+    assert clk.sleeps == [0.1, 0.2]            # two backoffs, exponential
+    assert tr.metrics.counter("stream.retry").value == 2
+    retry_spans = [s for s in tr.spans if s.name == "stream.retry"]
+    assert [s.attrs["attempt"] for s in retry_spans] == [1, 2]
+
+
+def test_retry_exhaustion_raises_chunk_read_failed():
+    clk = FakeClock()
+    flaky = FlakySource(_source(), FaultPlan(transient={0: 99}), clock=clk)
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.0, jitter=0.0,
+                      clock=clk)
+    with tracing(clock=clk) as tr:
+        with pytest.raises(ChunkReadFailed,
+                           match=r"source\.chunk\(0\) still failing after "
+                                 r"3 attempts") as ei:
+            pol.call(lambda: flaky.chunk(0), description="source.chunk(0)")
+    assert isinstance(ei.value.__cause__, TransientReadError)
+    assert tr.metrics.counter("stream.chunk_failures").value == 1
+    assert tr.metrics.counter("stream.retry").value == 2  # attempts 1, 2
+
+
+def test_retry_timeout_discards_slow_read_and_retries():
+    """Elapsed-clock timeout contract: a stalled read's VALUE is thrown
+    away (it exceeded timeout_s) and the read retried — the retry, no
+    longer stalling, succeeds."""
+    clk = FakeClock()
+    flaky = FlakySource(_source(), FaultPlan(stall_s={1: 10.0}), clock=clk)
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.5, jitter=0.0,
+                      timeout_s=2.0, clock=clk)
+    out = pol.call(lambda: flaky.chunk(1), description="source.chunk(1)")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(_source().chunk(1)))
+    assert clk.sleeps == [10.0, 0.5]           # the stall, then one backoff
+
+    dead = RetryPolicy(max_attempts=1, base_delay_s=0.0, timeout_s=2.0,
+                       clock=clk)
+    stuck = FlakySource(_source(), FaultPlan(stall_s={2: 10.0}), clock=clk)
+    with pytest.raises(ChunkReadFailed) as ei:
+        dead.call(lambda: stuck.chunk(2), description="source.chunk(2)")
+    assert isinstance(ei.value.__cause__, ReadTimeout)
+
+
+def test_retry_never_catches_kills_or_dead_sources():
+    clk = FakeClock()
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.0, clock=clk)
+    killer = FlakySource(_source(), FaultPlan(kill_at=(0,)), clock=clk)
+    with pytest.raises(ProcessKilled):
+        pol.call(lambda: killer.chunk(0))
+    corpse = FlakySource(_source(), FaultPlan(die_at=0), clock=clk)
+    with pytest.raises(SourceDied):
+        pol.call(lambda: corpse.chunk(0))
+    assert clk.sleeps == []                    # neither cost a retry sleep

@@ -37,6 +37,29 @@ def test_fake_clock_rejects_time_travel():
         FakeClock().advance(-1.0)
 
 
+def test_fake_clock_sleep_advances_and_records():
+    """``Clock.sleep`` (ISSUE 8): the injectable wait primitive.  On a
+    FakeClock it advances virtual time instantly and logs each request,
+    so retry/backoff tests assert exact sleep schedules with no real
+    waiting."""
+    clk = FakeClock(5.0)
+    clk.sleep(2.0)
+    clk.sleep(0.5)
+    assert clk() == 7.5
+    assert clk.sleeps == [2.0, 0.5]
+    with pytest.raises(ValueError, match="dt=-1"):
+        clk.sleep(-1.0)
+
+
+def test_monotonic_clock_sleep_really_waits():
+    from repro.obs.clock import MONOTONIC
+    t0 = MONOTONIC()
+    MONOTONIC.sleep(0.01)
+    assert MONOTONIC() - t0 >= 0.009
+    with pytest.raises(ValueError, match="dt=-0.5"):
+        MONOTONIC.sleep(-0.5)
+
+
 # ------------------------------------------------------------------ spans
 
 def test_span_nesting_depths_and_durations():

@@ -101,6 +101,80 @@ def test_straggler_recovery_streak_resets():
     assert m.compression_rank == 32
 
 
+def test_failure_to_replan_chain():
+    """The full recovery path, end to end under FakeClock: a pod's worth
+    of hosts goes silent -> check() raises HostFailure naming them ->
+    the survivor count feeds plan_elastic_mesh (model axis preserved,
+    data shrinks) -> the dead hosts rejoin -> the NEXT re-plan is back
+    to the full fleet and check() is healthy again."""
+    clk = FakeClock()
+    chips_per_host = 4
+    c = Coordinator(128, timeout_s=30.0, clock=clk)      # 512-chip fleet
+    clk.t = 10.0
+    for h in range(128):
+        c.heartbeat(h)
+    assert plan_elastic_mesh(len(c.alive_hosts) * chips_per_host) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+
+    clk.t = 50.0                       # hosts 64..127 (one pod) go silent
+    for h in range(64):
+        c.heartbeat(h)
+    with pytest.raises(HostFailure) as ei:
+        c.check()
+    assert ei.value.dead_hosts == list(range(64, 128))
+    assert ei.value.alive == 64
+    # failure handler: re-plan on the survivors — one pod, model intact
+    shape, axes = plan_elastic_mesh(ei.value.alive * chips_per_host)
+    assert shape == (16, 16) and axes == ("data", "model")
+    # dead hosts may not heartbeat without rejoining first
+    with pytest.raises(RuntimeError):
+        c.heartbeat(64)
+
+    for h in range(64, 128):           # replacements come up
+        c.rejoin(h)
+    for h in range(128):
+        c.heartbeat(h)
+    c.check()                          # healthy: no HostFailure
+    assert plan_elastic_mesh(len(c.alive_hosts) * chips_per_host) == \
+        ((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_straggler_hysteresis_through_recovery_under_fake_clock():
+    """Drive the monitor ONLY through ``step()`` timings on a FakeClock
+    (no hand-fed EWMAs): a host that slows down drops the compression
+    tier; once its step times recover, the tier climbs back only after
+    ``recovery_steps`` uninterrupted clear ``adapt()`` checks, and a
+    mid-streak relapse restarts the wait — no tier flapping."""
+    clk = FakeClock()
+    m = StragglerMonitor(2, threshold=1.5, rank_tiers=(32, 16),
+                         recovery_steps=2, clock=clk)
+
+    def run_step(host, seconds):
+        with m.step(host):
+            clk.advance(seconds)
+
+    for _ in range(5):                 # host 1 straggles
+        run_step(0, 1.0)
+        run_step(1, 4.0)
+    assert m.stragglers() == [1]
+    assert m.adapt() is True and m.compression_rank == 16
+
+    for _ in range(20):                # recovery (EWMA needs to converge)
+        run_step(0, 1.0)
+        run_step(1, 1.0)
+    assert m.stragglers() == []
+    assert m.adapt() is False          # clear check 1 of 2
+    run_step(1, 60.0)                  # relapse mid-streak
+    assert m.adapt() is False          # straggling again, tier floor
+    assert m.compression_rank == 16
+    for _ in range(40):
+        run_step(0, 1.0)
+        run_step(1, 1.0)
+    assert m.adapt() is False          # streak restarted: 1 of 2
+    assert m.adapt() is True           # 2 of 2 -> restore
+    assert m.compression_rank == 32
+
+
 def test_straggler_step_timer_feeds_ewma():
     """``mon.step(host)`` brackets the step with the injected clock and
     feeds the EWMA directly; under a tracer the durations land in the

@@ -215,6 +215,144 @@ def test_chunked_prefill_validation_messages():
         ServeEngine(mamba_cfg, None, prefill_chunk_tokens=8)
 
 
+# ---------------------------------------------- graceful degradation
+
+def test_submit_sheds_when_queue_full():
+    """Bounded-queue admission control: the engine sheds rather than
+    stalls, the shed request is terminal (``evicted``, reason named),
+    and it still shows up in the ledger."""
+    cfg = get_smoke_config("granite_3_2b")
+    eng = ServeEngine(cfg, None, max_batch=1, max_len=64, max_queue=2)
+    reqs = [GenerationRequest(request_id=i,
+                              prompt=np.arange(3, dtype=np.int32))
+            for i in range(3)]
+    assert eng.submit(reqs[0]) is True
+    assert eng.submit(reqs[1]) is True
+    assert eng.submit(reqs[2]) is False
+    assert reqs[2].status == "evicted" and "max_queue=2" in reqs[2].error
+    assert len(eng._queue) == 2 and reqs[2] in eng._all
+    with pytest.raises(ValueError, match="max_queue=0"):
+        ServeEngine(cfg, None, max_queue=0)
+
+
+def test_poisoned_requests_quarantined_without_model():
+    """Validation failures quarantine at admit — wrong rank, wrong
+    dtype, out-of-vocab ids, prompt too long for the cache — each marked
+    ``failed`` with the offense named, none reaching the jitted steps."""
+    cfg = get_smoke_config("granite_3_2b")
+    eng = ServeEngine(cfg, None, max_batch=2, max_len=16)
+    bad = [GenerationRequest(request_id=0,
+                             prompt=np.ones((2, 3), dtype=np.int32)),
+           GenerationRequest(request_id=1,
+                             prompt=np.array([0.5, 1.5], dtype=np.float32)),
+           GenerationRequest(request_id=2,
+                             prompt=np.array([0, cfg.vocab_size],
+                                             dtype=np.int32)),
+           GenerationRequest(request_id=3,
+                             prompt=np.arange(40, dtype=np.int32) %
+                             cfg.vocab_size)]
+    for r in bad:
+        eng.submit(r)
+    eng._admit()                    # engine survives all four
+    assert [r.status for r in bad] == ["failed"] * 4
+    for r, frag in zip(bad, ("1-D", "dtype", "vocab_size", "max_len=16")):
+        assert frag in r.error, (r.request_id, r.error)
+    assert eng._active == {} and eng._queue == []
+    assert not any(r.done for r in bad)
+
+
+@pytest.mark.slow
+def test_quarantine_spares_healthy_requests(small_model):
+    """The acceptance scenario: healthy requests complete normally while
+    the poisoned one is quarantined — one bad tenant cannot take the
+    batch down."""
+    from repro.obs import tracing
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    healthy = [GenerationRequest(request_id=i,
+                                 prompt=np.arange(4 + i, dtype=np.int32),
+                                 max_new_tokens=4)
+               for i in range(2)]
+    poison = GenerationRequest(request_id=9,
+                               prompt=np.array([-3, 1], dtype=np.int32))
+    eng.submit(healthy[0])
+    eng.submit(poison)
+    eng.submit(healthy[1])
+    with tracing() as tr:
+        done = eng.run()
+    assert {r.request_id for r in done} == {0, 1, 9}
+    assert all(r.done and len(r.output) == 4 for r in healthy)
+    assert poison.status == "failed" and "-3" in poison.error
+    assert tr.metrics.counter("serve.quarantined").value == 1
+
+
+def test_deadline_timeout_and_cancel_in_queue():
+    """Deadlines run off the injected obs clock (FakeClock: instant
+    tests); cancellation frees queued work as ``evicted``."""
+    from repro.obs import FakeClock
+    cfg = get_smoke_config("granite_3_2b")
+    clk = FakeClock()
+    eng = ServeEngine(cfg, None, max_batch=1, max_len=64, clock=clk)
+    late = GenerationRequest(request_id=0,
+                             prompt=np.arange(3, dtype=np.int32),
+                             deadline_s=5.0)
+    keep = GenerationRequest(request_id=1,
+                             prompt=np.arange(3, dtype=np.int32))
+    gone = GenerationRequest(request_id=2,
+                             prompt=np.arange(3, dtype=np.int32))
+    for r in (late, keep, gone):
+        eng.submit(r)
+    clk.advance(10.0)
+    eng._expire()
+    assert late.status == "timeout" and "deadline_s=5.0" in late.error
+    assert eng.cancel(2) is True and gone.status == "evicted"
+    assert eng.cancel(99) is False
+    assert [r.request_id for r in eng._queue] == [1]
+    assert keep.status == "queued"
+
+
+@pytest.mark.slow
+def test_deadline_expires_mid_decode(small_model):
+    """A request that outlives its deadline WHILE DECODING terminates as
+    ``timeout`` (partial output kept, slot freed) and the other slot
+    finishes normally."""
+    from repro.obs import FakeClock
+    cfg, params = small_model
+    clk = FakeClock(tick=1.0)          # every clock read advances 1s
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, clock=clk)
+    doomed = GenerationRequest(request_id=0,
+                               prompt=np.arange(4, dtype=np.int32),
+                               max_new_tokens=500, deadline_s=3.0)
+    fine = GenerationRequest(request_id=1,
+                             prompt=np.arange(5, dtype=np.int32),
+                             max_new_tokens=4)
+    eng.submit(doomed)
+    eng.submit(fine)
+    done = eng.run()
+    assert {r.request_id for r in done} == {0, 1}
+    assert doomed.status == "timeout" and len(doomed.output) < 500
+    assert "exceeded after" in doomed.error
+    assert fine.done and len(fine.output) == 4
+
+
+def test_run_at_max_steps_evicts_instead_of_dropping():
+    """The silent-drop fix: run() hitting max_steps before the queue
+    drains marks the leftovers ``evicted`` (reason named) and RETURNS
+    them — every submitted request is accounted for."""
+    cfg = get_smoke_config("granite_3_2b")
+    eng = ServeEngine(cfg, None, max_batch=1, max_len=64)
+    reqs = [GenerationRequest(request_id=i,
+                              prompt=np.arange(3, dtype=np.int32))
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run(max_steps=0)
+    assert {r.request_id for r in out} == {0, 1}
+    assert all(r.status == "evicted" and "max_steps=0" in r.error
+               for r in reqs)
+    assert eng._queue == [] and eng._active == {}
+
+
 # ---------------------------------------------------------- RID weights
 
 def test_compress_params_factor_low_rank():

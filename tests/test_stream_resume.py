@@ -1,0 +1,177 @@
+"""Checkpoint/resume for the streamed RID (ISSUE 8 tentpole).
+
+The headline acceptance property: kill the pipeline mid-run, resume
+from ``resume_dir``, and every ``IDResult`` field is ``np.array_equal``
+to an uninterrupted run's — bit-for-bit, per dtype, including the
+uneven final chunk.  Checkpoint replay is exact because the reduction
+order is pinned to ``ACCUM_BLOCK`` blocks with per-block seeded omega
+(PR 5); these tests are what keeps that guarantee honest under faults.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.obs import FakeClock, tracing
+from repro.runtime import (FaultPlan, FlakySource, ProcessKilled,
+                           RetryPolicy)
+from repro.stream import ArraySource, rid_streamed, source_fingerprint
+
+from test_stream import DTYPES, _assert_identical, _matrix
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scope():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+K = 72
+CHUNK = 384                # 1000 % 384 = 232: uneven final chunk
+
+
+def _clean(dtype, key=1):
+    A = _matrix(DTYPES[dtype])
+    return rid_streamed(jax.random.key(key),
+                        ArraySource(np.asarray(A), CHUNK), K)
+
+
+@pytest.mark.parametrize("dtype_name", sorted(DTYPES))
+def test_kill_and_resume_is_bit_identical(dtype_name, tmp_path):
+    """SIGKILL at a pass-1 chunk boundary -> resume -> same bits as an
+    uninterrupted run, every field, every dtype, uneven tail included."""
+    ref = _clean(dtype_name)
+    A = np.asarray(_matrix(DTYPES[dtype_name]))
+    # the pipeline prefetches chunk c+1 during iteration c, so a kill on
+    # the read of chunk 2 lands AFTER the chunk-1 checkpoint: a real
+    # mid-run interruption with durable state behind it
+    flaky = FlakySource(ArraySource(A, CHUNK), FaultPlan(kill_at=(2,)))
+    with pytest.raises(ProcessKilled):
+        rid_streamed(jax.random.key(1), flaky, K, resume_dir=str(tmp_path))
+    # the kill fired once; the resumed run replays the remaining chunks
+    # onto the checkpointed accumulator
+    with tracing() as tr:
+        out = rid_streamed(jax.random.key(1), flaky, K,
+                           resume_dir=str(tmp_path))
+    _assert_identical(ref, out)
+    assert [s.attrs["chunk"] for s in tr.spans
+            if s.name == "stream.accumulate"] == [1, 2]  # resumed, not rerun
+
+
+def test_pass2_resume_skips_pass1_and_qr(tmp_path):
+    """A kill during the pass-2 gather resumes INTO pass 2: the trace of
+    the resumed run shows zero accumulate/QR work (the post-QR marker
+    checkpoint made pass 1 and the factorization durable) and the output
+    still matches the uninterrupted run exactly."""
+
+    class KillOnReRead:
+        """Healthy through pass 1; dies on the pass-2 RE-read of a
+        chunk (FlakySource kills on first read, which pass 1 owns)."""
+
+        def __init__(self, inner, chunk):
+            self.inner, self._kill_chunk = inner, chunk
+            self.shape, self.dtype = inner.shape, inner.dtype
+            self.chunk_rows = inner.chunk_rows
+            self._reads: dict = {}
+
+        def chunk(self, c):
+            n = self._reads.get(c, 0) + 1
+            self._reads[c] = n
+            if c == self._kill_chunk and n == 2:
+                raise ProcessKilled(f"injected kill on re-read of {c}")
+            return self.inner.chunk(c)
+
+    ref = _clean("float32")
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    src = KillOnReRead(ArraySource(A, CHUNK), chunk=1)
+    with pytest.raises(ProcessKilled):
+        rid_streamed(jax.random.key(1), src, K, resume_dir=str(tmp_path))
+    assert src._reads[0] == 2                  # pass 2 got through chunk 0
+    with tracing() as tr:
+        out = rid_streamed(jax.random.key(1), src, K,
+                           resume_dir=str(tmp_path))
+    _assert_identical(ref, out)
+    names = [s.name for s in tr.spans]
+    assert "stream.accumulate" not in names    # no pass-1 replay
+    assert "stream.qr_interp" not in names     # no QR replay
+    root = next(s for s in tr.spans if s.name == "rid_streamed")
+    assert ("stream.resume", ) == tuple(e[0] for e in root.events
+                                        if e[0] == "stream.resume")
+
+
+def test_resume_with_coarser_checkpoint_cadence(tmp_path):
+    """checkpoint_every > 1: the resume point is the last saved multiple,
+    the replayed chunks re-accumulate, and the bits still match."""
+    ref = _clean("float32")
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    src = ArraySource(A, 128)                  # C = ceil(1000/128) = 8
+    flaky = FlakySource(src, FaultPlan(kill_at=(5,)))
+    with pytest.raises(ProcessKilled):
+        rid_streamed(jax.random.key(1), flaky, K, resume_dir=str(tmp_path),
+                     checkpoint_every=3)
+    with tracing() as tr:
+        out = rid_streamed(jax.random.key(1), flaky, K,
+                           resume_dir=str(tmp_path), checkpoint_every=3)
+    _assert_identical(ref, out)
+    # killed at chunk 5, last checkpoint at 3 -> pass 1 resumes there
+    resumed_chunks = [s.attrs["chunk"] for s in tr.spans
+                      if s.name == "stream.accumulate"]
+    assert resumed_chunks == [3, 4, 5, 6, 7]
+
+
+def test_resume_rejects_foreign_fingerprint(tmp_path):
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    flaky = FlakySource(ArraySource(A, CHUNK), FaultPlan(kill_at=(2,)))
+    with pytest.raises(ProcessKilled):
+        rid_streamed(jax.random.key(1), flaky, K, resume_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="written by a different job"):
+        rid_streamed(jax.random.key(2), flaky, K,      # different key
+                     resume_dir=str(tmp_path))
+
+
+def test_fingerprint_covers_job_identity():
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    src = ArraySource(A, CHUNK)
+    base = source_fingerprint(jax.random.key(1), src, K, 2 * K,
+                              "blocked", 32, "auto")
+    assert base.shape == (32,) and base.dtype == np.uint8
+    for other in (
+            source_fingerprint(jax.random.key(2), src, K, 2 * K,
+                               "blocked", 32, "auto"),
+            source_fingerprint(jax.random.key(1), src, K - 1, 2 * K,
+                               "blocked", 32, "auto"),
+            source_fingerprint(jax.random.key(1), ArraySource(A, 128), K,
+                               2 * K, "blocked", 32, "auto"),
+            source_fingerprint(jax.random.key(1), src, K, 2 * K,
+                               "cgs2", 32, "auto")):
+        assert not np.array_equal(base, other)
+
+
+def test_checkpoint_every_validation():
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    with pytest.raises(ValueError, match="checkpoint_every=0"):
+        rid_streamed(jax.random.key(1), ArraySource(A, CHUNK), K,
+                     checkpoint_every=0)
+
+
+def test_acceptance_twenty_percent_transients_retry_through():
+    """The ISSUE's acceptance plan: under a seeded 20% transient-read
+    failure plan, ``rid_streamed`` with a RetryPolicy completes, the
+    retries are visible in the trace counters, and the output is
+    bit-identical to the clean run."""
+    ref = _clean("float32")
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    clk = FakeClock()
+    plan = FaultPlan.from_env(transient_p=0.2)     # seed 0 unless CI sets it
+    flaky = FlakySource(ArraySource(A, CHUNK), plan, clock=clk)
+    pol = RetryPolicy(max_attempts=6, base_delay_s=0.01, clock=clk)
+    with tracing(clock=clk) as tr:
+        out = rid_streamed(jax.random.key(1), flaky, K, retry=pol)
+    _assert_identical(ref, out)
+    assert flaky.injected["transient"] >= 1
+    assert tr.metrics.counter("stream.retry").value == \
+        flaky.injected["transient"]
+    assert len(clk.sleeps) == flaky.injected["transient"]

@@ -36,13 +36,16 @@ across the sweep.
 from __future__ import annotations
 
 import argparse
+import os
+import tempfile
 
 import jax
 import numpy as np
 
+from repro.compat import AxisType, make_mesh
 from repro.core import rid_streamed
 from repro.obs import MeteredSource, tracing
-from repro.stream import ArraySource
+from repro.stream import ArraySource, FileSource
 
 from .bench_scaling import HBM, PEAK
 from .common import append_json_rows, emit
@@ -132,14 +135,84 @@ def stream_sweep(*, full=False, json_path=None):
     return rows + phase_rows
 
 
+def stream_sharded_sweep(*, full=False, json_path=None):
+    """Weak scaling of the sharded, FILE-BACKED pipeline (ISSUE 9): the
+    on-disk matrix grows with the device count (``n = n0 * ndev`` —
+    each device keeps the same column shard) while ``m`` streams from
+    disk, so ideal weak scaling is flat wall time AND flat per-device
+    residency.  Emits ``bench = "stream_sharded"`` rows:
+
+      ndev, m, n, k, chunk_rows, on_disk_bytes, wall_s,
+      peak_device_bytes (all devices), peak_per_device_bytes,
+      acc_shard_bytes (the l x n/ndev accumulator shard — constant
+      across the sweep by construction)
+
+    into the ``BENCH_scaling.json`` record.  CI runs this step under
+    ``--xla_force_host_platform_device_count=8``.
+    """
+    devices = jax.devices()
+    n0, k, chunk_rows = 256, 48, 512
+    m = 16384 if full else 8192
+    l = 2 * k
+    ndevs = [d for d in (1, 2, 4, 8) if d <= len(devices)]
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for ndev in ndevs:
+            n = n0 * ndev
+            mesh = make_mesh((ndev,), ("data",), devices=devices[:ndev],
+                             axis_types=(AxisType.Auto,))
+            path = os.path.join(tmp, f"a_{ndev}.npy")
+            np.save(path, np.asarray(
+                np.random.default_rng(3).standard_normal((m, n)),
+                np.float32))
+            key = jax.random.key(1)
+            with FileSource(path, chunk_rows) as fsrc:
+                src = MeteredSource(fsrc)
+                # warm the per-(mesh, shape) jit caches off the clock
+                jax.block_until_ready(
+                    rid_streamed(key, src, k, mesh=mesh).P)
+                with tracing() as tr:
+                    jax.block_until_ready(
+                        rid_streamed(key, src, k, mesh=mesh).P)
+            rows.append({
+                "bench": "stream_sharded", "ndev": ndev, "m": m, "n": n,
+                "k": k, "chunk_rows": chunk_rows,
+                "on_disk_bytes": os.path.getsize(path),
+                "wall_s": _root_dur(tr),
+                "peak_device_bytes": src.peak_bytes,
+                "peak_per_device_bytes": src.peak_bytes // ndev,
+                "acc_shard_bytes": l * (n // ndev) * 4,
+            })
+    emit(rows, header="sharded file-backed streaming RID: weak scaling "
+                      "(devices x on-disk bytes; flat per-device residency)")
+    if json_path:
+        append_json_rows(json_path, rows)
+    # Acceptance shape: every input exceeds the device working set it was
+    # decomposed with (the file never fit), and the PER-DEVICE residency
+    # stays flat as devices x columns grow together.
+    for r in rows:
+        assert r["on_disk_bytes"] > r["peak_device_bytes"], r
+    per_dev = [r["peak_per_device_bytes"] for r in rows]
+    assert max(per_dev) < 2 * min(per_dev), \
+        f"per-device residency grows with the mesh: {per_dev}"
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the sharded file-backed weak-scaling sweep "
+                         "(n grows with the local device count) instead "
+                         "of the single-device m-sweep")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="append stream_scaling rows to this JSON record "
                          "(the BENCH_scaling.json contract)")
     args = ap.parse_args(argv)
-    stream_sweep(full=args.full, json_path=args.json)
+    if args.sharded:
+        stream_sharded_sweep(full=args.full, json_path=args.json)
+    else:
+        stream_sweep(full=args.full, json_path=args.json)
 
 
 if __name__ == "__main__":

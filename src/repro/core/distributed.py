@@ -58,7 +58,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import shard_map
 from .qr import (_h as _conj_t, pivoted_qr, resolve_norm_recompute,
                  resolve_panel)
-from .qr_dist import gather_columns_psum, panel_parallel_qr_local
+from .qr_dist import (identity_at_owned_pivots,
+                      panel_parallel_rid_interp_local)
 from .sketch import sketch as _sketch
 from .tsolve import solve_upper_triangular_xla
 from .types import IDResult
@@ -75,17 +76,6 @@ def shard_columns(A: jax.Array, mesh: Mesh, axis: str) -> jax.Array:
     return jax.device_put(A, NamedSharding(mesh, P(None, axis)))
 
 
-def _identity_at_owned_pivots(P_loc: jax.Array, piv: jax.Array, axis: str
-                              ) -> jax.Array:
-    """Exact-identity scatter for pivot columns that live in this shard."""
-    n_loc = P_loc.shape[1]
-    off = lax.axis_index(axis) * n_loc
-    cols = off + jnp.arange(n_loc, dtype=jnp.int32)
-    match = cols[None, :] == piv[:, None]                    # (k, n_loc)
-    return jnp.where(match.any(axis=0)[None, :], match.astype(P_loc.dtype),
-                     P_loc)
-
-
 def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
                   qr_impl: str, qr_panel: int, norm_recompute):
     """Per-device body for the REPLICATED-QR path; identical randomness on
@@ -99,7 +89,7 @@ def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
                         norm_recompute=norm_recompute)
         R1 = jnp.take(qr.R, qr.piv, axis=1)
         P_loc = solve_upper_triangular_xla(R1, _conj_t(qr.Q) @ Y_loc)  # no comm
-        P_loc = _identity_at_owned_pivots(P_loc, qr.piv, axis)
+        P_loc = identity_at_owned_pivots(P_loc, qr.piv, axis)
         return P_loc, qr.piv, qr.Q, qr.R
 
     return fn
@@ -108,19 +98,15 @@ def _local_rid_fn(k: int, l: int, sketch_kind: str, axis: str,
 def _local_rid_panel_parallel_fn(k: int, l: int, sketch_kind: str, axis: str,
                                  ndev: int, qr_panel: int, norm_recompute):
     """Per-device body for the PANEL-PARALLEL path: the sketch shard is
-    factored in place (``core.qr_dist``) — no ``l x n`` array per device."""
+    factored in place and interpolated column-parallel — the shared
+    ``core.qr_dist.panel_parallel_rid_interp_local`` body, with the
+    shard-local sketch in front (no ``l x n`` array per device)."""
 
     def fn(key, A_loc):
         Y_loc = _sketch(key, A_loc, l, kind=sketch_kind).Y           # (l, n_loc)
-        Q, piv, R_loc = panel_parallel_qr_local(
+        return panel_parallel_rid_interp_local(
             Y_loc, k, axis=axis, ndev=ndev, panel=qr_panel,
             norm_recompute=norm_recompute)
-        # R1 = Q^H Y[:, piv] is exactly the pivot columns of the sharded
-        # R = Q^H Y — a k x k psum gather, no extra GEMM.
-        R1 = gather_columns_psum(R_loc, piv, axis)
-        P_loc = solve_upper_triangular_xla(R1, R_loc)                # no comm
-        P_loc = _identity_at_owned_pivots(P_loc, piv, axis)
-        return P_loc, piv, Q, R_loc
 
     return fn
 

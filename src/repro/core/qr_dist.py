@@ -83,11 +83,13 @@ from ..kernels.panel_gram import panel_gram
 from ..kernels.panel_step import panel_apply, panel_coeff
 from ..obs import trace as obs_trace
 from .qr import _h, householder_qr, resolve_norm_recompute
+from .tsolve import solve_upper_triangular_xla
 from .types import QRResult
 from .validate import check_divides, check_panel, check_rank_bounds
 
 __all__ = ["panel_parallel_pivoted_qr", "panel_parallel_qr_local",
-           "gather_columns_psum"]
+           "panel_parallel_rid_interp_local", "gather_columns_psum",
+           "identity_at_owned_pivots"]
 
 
 def gather_columns_psum(Z_loc: jax.Array, idx: jax.Array, axis: str
@@ -299,6 +301,55 @@ def panel_parallel_qr_local(Y_loc: jax.Array, k: int, *, axis: str,
         pos += b
     R_loc = _h(Q) @ Y_loc                      # exact recompute, oracle contract
     return Q, piv, R_loc
+
+
+def identity_at_owned_pivots(P_loc: jax.Array, piv: jax.Array, axis: str
+                             ) -> jax.Array:
+    """Exact-identity scatter for pivot columns that live in this shard:
+    the interpolation matrix at the pivot columns is the identity by
+    construction, so write it exactly instead of through the solve's
+    roundoff."""
+    n_loc = P_loc.shape[1]
+    off = lax.axis_index(axis) * n_loc
+    cols = off + jnp.arange(n_loc, dtype=jnp.int32)
+    match = cols[None, :] == piv[:, None]                    # (k, n_loc)
+    return jnp.where(match.any(axis=0)[None, :], match.astype(P_loc.dtype),
+                     P_loc)
+
+
+def panel_parallel_rid_interp_local(Y_loc: jax.Array, k: int, *, axis: str,
+                                    ndev: int, panel: int = 32,
+                                    panel_impl: str = "fused",
+                                    norm_recompute="auto"
+                                    ) -> tuple[jax.Array, jax.Array,
+                                               jax.Array, jax.Array]:
+    """Per-device QRCP + interpolation body: the sharded twin of
+    ``core.rid._qr_interp`` — call INSIDE a ``shard_map`` over ``axis``
+    with ``Y_loc`` the device's ``l x n/ndev`` column shard of the
+    sketch.  Composes :func:`panel_parallel_qr_local` with the
+    column-parallel interpolation solve:
+
+      * ``R1 = Q^H Y[:, piv]`` is exactly the pivot columns of the
+        sharded ``R`` — a ``k x k`` psum gather, no extra GEMM;
+      * each device solves ``R1 P_loc = R_loc`` for its OWN column block
+        (zero communication — the paper's "column-wise in parallel");
+      * pivot columns the shard owns are written as exact identity.
+
+    Returns ``(P_loc, piv, Q, R_loc)``: ``piv``/``Q`` replicated
+    (bitwise identical on every device), ``P_loc`` (k x n_loc) and
+    ``R_loc`` (k x n_loc) column-sharded.  Both ``rid_distributed``'s
+    panel-parallel path and the sharded ``stream.rid_streamed`` wrap
+    exactly this body — the device-side program of the n-axis is ONE
+    function regardless of where the m-axis lives (HBM or a chunk
+    stream).
+    """
+    Q, piv, R_loc = panel_parallel_qr_local(
+        Y_loc, k, axis=axis, ndev=ndev, panel=panel, panel_impl=panel_impl,
+        norm_recompute=norm_recompute)
+    R1 = gather_columns_psum(R_loc, piv, axis)
+    P_loc = solve_upper_triangular_xla(R1, R_loc)            # no comm
+    P_loc = identity_at_owned_pivots(P_loc, piv, axis)
+    return P_loc, piv, Q, R_loc
 
 
 def panel_parallel_pivoted_qr(Y: jax.Array, k: int, *, mesh: Mesh,

@@ -159,7 +159,13 @@ class MeteredSource:
     """Wrap a ChunkSource; track peak ``live_device_bytes`` across chunk
     fetches (the streaming-RID residency meter).  When given a ``gauge``,
     every sample is also recorded there, so a traced run exports the
-    residency track next to the chunk spans."""
+    residency track next to the chunk spans.
+
+    Like ``runtime.faults.FlakySource``, the optional ``sigmas`` /
+    ``fingerprint`` / ``close`` surfaces delegate to the wrapped source:
+    metering must not change the resume identity (a metered
+    ``FileSource`` fingerprints its file, not None) nor leak the
+    wrapped source's mmap/threads."""
 
     def __init__(self, inner, *, gauge: Optional[Gauge] = None):
         self._inner = inner
@@ -169,9 +175,29 @@ class MeteredSource:
         self.chunk_rows = inner.chunk_rows
         self.peak_bytes = 0
 
+    @property
+    def sigmas(self):
+        return getattr(self._inner, "sigmas", None)
+
+    def fingerprint(self):
+        fp = getattr(self._inner, "fingerprint", None)
+        return fp() if callable(fp) else fp
+
     def chunk(self, c: int):
         live = live_device_bytes()
         self.peak_bytes = max(self.peak_bytes, live)
         if self._gauge is not None:
             self._gauge.set(live)
         return self._inner.chunk(c)
+
+    def close(self):
+        close = getattr(self._inner, "close", None)
+        if callable(close):
+            close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

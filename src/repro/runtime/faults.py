@@ -159,9 +159,11 @@ class FlakySource:
     """A :class:`~repro.stream.chunks.ChunkSource` that misbehaves on
     schedule.  Wraps any conforming source and realizes a
     :class:`FaultPlan` against it; geometry (``shape`` / ``dtype`` /
-    ``chunk_rows``) and the optional ``sigmas`` / ``fingerprint``
-    surfaces delegate to the wrapped source, so the pipeline (and the
-    resume fingerprint) cannot tell the difference on the healthy path.
+    ``chunk_rows``) and the optional ``sigmas`` / ``fingerprint`` /
+    ``close`` surfaces delegate to the wrapped source, so the pipeline
+    (and the resume fingerprint) cannot tell the difference on the
+    healthy path — and wrapping a ``FileSource`` still releases its
+    mmap and read-ahead thread on ``close()``.
 
     ``injected`` tallies what actually fired, keyed by fault kind —
     the chaos lane's report reads it straight off the source.
@@ -208,6 +210,20 @@ class FlakySource:
             raise TransientReadError(f"injected transient read error: "
                                      f"chunk {c}, attempt {attempt}")
         return self.inner.chunk(c)
+
+    def close(self):
+        """Delegate to the wrapped source (``FileSource`` owns a mmap and
+        a read-ahead thread); a no-op for sources without ``close``."""
+        close = getattr(self.inner, "close", None)
+        if callable(close):
+            close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 class RetryPolicy:

@@ -1,9 +1,10 @@
 """Streaming decomposition subsystem: RID over matrices materialized
 only chunk-at-a-time (see rid_stream.py for the full cost table and the
 bit-for-bit replay contract with the in-memory path)."""
-from .chunks import (ArraySource, ChunkSource, SpectrumSource, chunk_bounds,
-                     num_chunks)
+from .chunks import (ArraySource, ChunkSource, FileSource, SpectrumSource,
+                     check_chunk_index, chunk_bounds, num_chunks)
 from .rid_stream import rid_streamed, source_fingerprint
 
 __all__ = ["rid_streamed", "ChunkSource", "ArraySource", "SpectrumSource",
-           "num_chunks", "chunk_bounds", "source_fingerprint"]
+           "FileSource", "num_chunks", "chunk_bounds", "check_chunk_index",
+           "source_fingerprint"]

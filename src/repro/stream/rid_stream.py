@@ -27,6 +27,33 @@ enqueued — on hardware with a DMA engine the copy overlaps the GEMM
 (``overlap=False`` serializes the two for benchmarking the gain;
 ``benchmarks/bench_stream.py`` records the measured overlap efficiency).
 
+SHARDED N AXIS — ``mesh=`` composes the stream with the device mesh:
+``m`` streams from host (chunks) while ``n`` shards over
+``ndev = mesh.shape[axis]`` devices (columns), the two scaling axes of
+the 64 GB path.  The table above, rebuilt PER DEVICE for the two-axis
+(stream-m x shard-n) pipeline:
+
+  phase             device bytes resident / DEVICE   communication
+  sketch (pass 1)   l n/ndev (accumulator shard)     0 between devices —
+                    + 2 chunk_rows n/ndev (buffers)  the operator acts on
+                    + l chunk_rows (operator slab)   the ROW index only
+  pivoted QR        l n/ndev + panel state           O(k/b (n + l b))
+                    (``core.qr_dist`` in-place       psum bytes, the O(n)
+                    panel-parallel engine)           term latency-hidden
+  interp solve      k n/ndev                         one l x k + k x k
+                                                     psum (pivot columns)
+  gather (pass 2)   one chunk (host numpy ``B``)     0
+
+No stage materializes an ``l x n`` array per device — the accumulator,
+sketch, and ``R`` live column-sharded end to end, so sketch width
+scales with the mesh while peak residency stays flat in ``m`` (the
+``rid_streamed.sharded_step`` analysis entry pins a collective budget
+of ``l*n - 1`` elements in CI).  Because ``kernels/sketch_accum``
+computes every output column independently (fixed ACCUM_BLOCK row
+association), the shard-local accumulator is BIT-equal to the same
+columns of the single-device accumulator; pivots and all IDResult
+fields then agree with the single-device ``panel_parallel`` engine's.
+
 REPLAY GUARANTEE — ``rid_streamed`` is bit-for-bit identical to the
 in-memory ``rid`` for the same PRNG key.  Three pieces make that true:
 
@@ -103,23 +130,72 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+from functools import lru_cache, partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from ..checkpoint.store import CheckpointManager, latest_step, restore_pytree
+from ..compat import shard_map
+from ..core.qr import resolve_norm_recompute, resolve_panel
+from ..core.qr_dist import panel_parallel_rid_interp_local
 from ..core.rid import _cast_interp, _qr_interp
 from ..core.sketch import finalize_gaussian_sketch, gaussian_omega_cols
 from ..core.types import IDResult
-from ..core.validate import check_l_ge_k, check_rank_bounds
-from ..kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
+from ..core.validate import (check_divides, check_l_ge_k, check_panel,
+                             check_rank_bounds)
+from ..kernels.sketch_accum import ACCUM_BLOCK, accum_dtype_for, sketch_accum
 from ..obs import trace as obs_trace
 from ..obs.metrics import live_device_bytes
 from .chunks import ChunkSource, chunk_bounds, num_chunks
 
 __all__ = ["rid_streamed", "source_fingerprint"]
+
+
+# --------------------------------------------------- sharded n-axis plumbing
+# Cached per (mesh, axis[, qr args]) so every chunk of a streamed job (and
+# every job on the same mesh) reuses ONE traced/compiled program instead of
+# re-tracing a fresh shard_map per call.
+
+@lru_cache(maxsize=None)
+def _sharded_accum_fn(mesh: Mesh, axis: str):
+    """jit(shard_map) of one accumulate step over column shards:
+    ``acc_loc += omega_c @ a_loc``.  The sketch operator acts on the ROW
+    index only, so each device reduces its own columns with ZERO
+    communication, and because ``kernels/sketch_accum`` computes every
+    output column independently (fixed ACCUM_BLOCK row association,
+    zero-padding only), the shard-local accumulator is BIT-equal to the
+    same columns of the single-device accumulator."""
+    spec = PartitionSpec(None, axis)
+
+    def step(x, a_loc, acc_loc):
+        return sketch_accum(x, a_loc, acc_loc)
+
+    return jax.jit(shard_map(step, mesh=mesh,
+                             in_specs=(PartitionSpec(), spec, spec),
+                             out_specs=spec, check_vma=False))
+
+
+@lru_cache(maxsize=None)
+def _sharded_qr_interp_fn(mesh: Mesh, axis: str, k: int, qr_panel: int,
+                          qr_norm_recompute):
+    """jit(shard_map) of the sharded steps 2-3: the panel-parallel QRCP +
+    column-parallel interpolation body (``core.qr_dist.
+    panel_parallel_rid_interp_local``) over the column-sharded sketch —
+    no ``l x n`` array ever materializes per device (the
+    ``jaxpr.replicated-collective`` contract registered below)."""
+    ndev = mesh.shape[axis]
+    fn = partial(panel_parallel_rid_interp_local, k=k, axis=axis, ndev=ndev,
+                 panel=qr_panel, norm_recompute=qr_norm_recompute)
+    spec = PartitionSpec(None, axis)
+    mapped = shard_map(fn, mesh=mesh, in_specs=(spec,),
+                       out_specs=(spec, PartitionSpec(), PartitionSpec(),
+                                  spec),
+                       check_vma=False)
+    return jax.jit(mapped)
 
 
 def _checked_chunk(source: ChunkSource, c: int):
@@ -198,8 +274,9 @@ def _load_resume_state(resume_dir: str, fp: np.ndarray) -> Optional[dict]:
 
 def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                  l: Optional[int] = None, sketch_kind: str = "gaussian",
-                 qr_impl: str = "blocked", qr_panel: int = 32,
-                 qr_norm_recompute="auto", overlap: bool = True,
+                 qr_impl: str = "auto", qr_panel: int = 32,
+                 qr_norm_recompute="auto", mesh: Optional[Mesh] = None,
+                 axis: str = "data", overlap: bool = True,
                  retry=None, resume_dir: Optional[str] = None,
                  checkpoint_every: int = 1) -> IDResult:
     """Rank-``k`` randomized ID of a chunk-fed matrix: ``A ~= B @ P``.
@@ -222,7 +299,19 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
       sketch_kind: must be ``'gaussian'`` — the one backend whose
         operator applies row-by-row (srft/srht need all of ``m``).
       qr_impl / qr_panel / qr_norm_recompute: forwarded unchanged to the
-        QRCP engine (see ``rid``).
+        QRCP engine (see ``rid``).  ``qr_impl='auto'`` (default) resolves
+        to ``'blocked'`` without a mesh and ``'panel_parallel'`` with one
+        — the resolution happens BEFORE the resume fingerprint is
+        computed, so existing single-device checkpoints stay valid.
+      mesh / axis: optional device mesh.  With ``mesh`` set, the n axis
+        is column-sharded over ``mesh.shape[axis]`` devices for the whole
+        device-side pipeline (module docstring, SHARDED N AXIS): the
+        accumulator lives as ``l x n/ndev`` shards, the QRCP +
+        interpolation run through the in-place panel-parallel body
+        (``core.qr_dist.panel_parallel_rid_interp_local``), and no
+        ``l x n`` array is ever replicated on one device — m streams
+        from host while n scales with the mesh.  ``n`` must divide
+        ``ndev``; ``qr_impl`` must be ``'auto'``/``'panel_parallel'``.
       overlap: pipeline the next chunk's host->device transfer against
         the current chunk's accumulate GEMM (default); ``False``
         serializes them (benchmark baseline).
@@ -268,6 +357,40 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
     if checkpoint_every < 1:
         raise ValueError(f"need checkpoint_every >= 1, got "
                          f"checkpoint_every={checkpoint_every}")
+    # qr_impl resolves BEFORE the fingerprint below so a single-device
+    # 'auto' job digests as 'blocked' (PR-8 checkpoints stay resumable)
+    # and a sharded job digests as 'panel_parallel' (a different job —
+    # its R comes back column-sharded, not replicated).
+    if qr_impl == "auto":
+        qr_impl = "blocked" if mesh is None else "panel_parallel"
+    sharding = None
+    if mesh is None:
+        if qr_impl == "panel_parallel":
+            raise ValueError(
+                f"qr_impl={qr_impl!r} factors column SHARDS in place and "
+                f"needs mesh=...; got mesh=None — pass a mesh or leave "
+                f"qr_impl='auto'")
+    else:
+        if qr_impl != "panel_parallel":
+            raise ValueError(
+                f"sharded rid_streamed factors the column shards in place; "
+                f"need qr_impl='panel_parallel' (or 'auto'), got "
+                f"qr_impl={qr_impl!r}")
+        if axis not in mesh.shape:
+            raise ValueError(f"axis={axis!r} is not an axis of the mesh "
+                             f"(axes: {tuple(mesh.shape)})")
+        ndev = mesh.shape[axis]
+        check_divides(n, ndev, axis, ctx="rid_streamed: ")
+        qr_panel = resolve_panel(qr_panel, k, l)
+        check_panel(qr_panel, name="qr_panel")
+        resolve_norm_recompute(qr_norm_recompute)  # eager: reject pre-trace
+        sharding = NamedSharding(mesh, PartitionSpec(None, axis))
+
+    def put(x):
+        # Chunk/accumulator placement: column-sharded over the mesh, or
+        # the default device when unsharded.
+        return jax.device_put(x) if sharding is None else \
+            jax.device_put(x, sharding)
 
     def read_chunk(c):
         if retry is None:
@@ -288,11 +411,20 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
             phase = int(state["phase"])
             done = int(state["chunks_done"])
             if phase == 1:
-                start1, acc = done, jnp.asarray(state["acc"])
+                start1, acc = done, put(state["acc"])
             else:
                 interp = tuple(jnp.asarray(state[name])
                                for name in ("P", "J", "Q", "R"))
                 B, start2 = state["B"], done
+
+    if mesh is None:
+        accum_step = sketch_accum      # acc=None on the first chunk is fine
+    else:
+        accum_step = _sharded_accum_fn(mesh, axis)
+        if phase == 1 and acc is None:
+            # shard_map needs an explicit operand: sharded zeros in the
+            # accumulator dtype (what sketch_accum would have created).
+            acc = put(jnp.zeros((l, n), accum_dtype_for(dtype)))
 
     tracer = obs_trace.current_tracer()
     deep = obs_trace.deep_tracing()
@@ -311,7 +443,8 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
 
     with obs_trace.span("rid_streamed", m=m, n=n, k=k, l=l,
                         chunk_rows=chunk_rows, overlap=overlap,
-                        dtype=str(dtype)):
+                        dtype=str(dtype),
+                        ndev=1 if mesh is None else mesh.shape[axis]):
         if resume_dir is not None and (start1 or phase == 2):
             obs_trace.event("stream.resume", phase=phase,
                             chunks_done=start1 if phase == 1 else start2)
@@ -323,7 +456,7 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                     if start1 < C:
                         with obs_trace.span("stream.h2d", chunk=start1,
                                             sync=deep) as sp:
-                            nxt = jax.device_put(read_chunk(start1))
+                            nxt = put(read_chunk(start1))
                             h2d_ctr.add(int(nxt.nbytes))
                             if deep:
                                 sp.block_on(nxt)
@@ -337,7 +470,7 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                                             sync=deep or not overlap) as sp:
                             omega_c = gaussian_omega_cols(key, r0, r1, l,
                                                           dtype)
-                            acc = sketch_accum(omega_c, cur, acc)  # async
+                            acc = accum_step(omega_c, cur, acc)  # async
                             if not overlap:
                                 jax.block_until_ready(acc)
                             elif deep:           # deep tracing: true device
@@ -345,7 +478,7 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                         if c + 1 < C:            # H2D of c+1 rides the GEMM
                             with obs_trace.span("stream.h2d", chunk=c + 1,
                                                 sync=deep) as sp:
-                                nxt = jax.device_put(read_chunk(c + 1))
+                                nxt = put(read_chunk(c + 1))
                                 h2d_ctr.add(int(nxt.nbytes))
                                 if deep:
                                     sp.block_on(nxt)
@@ -363,8 +496,12 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
             if interp is None:
                 with obs_trace.span("stream.qr_interp", qr_impl=qr_impl,
                                     qr_panel=qr_panel) as sp:
-                    P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel,
-                                              qr_norm_recompute)
+                    if mesh is None:
+                        P, piv, Q, R = _qr_interp(Y, k, qr_impl, qr_panel,
+                                                  qr_norm_recompute)
+                    else:
+                        P, piv, Q, R = _sharded_qr_interp_fn(
+                            mesh, axis, k, qr_panel, qr_norm_recompute)(Y)
                     P = _cast_interp(P, dtype)
                     sp.block_on((P, piv, Q, R))
             else:
@@ -442,9 +579,36 @@ def _analysis_build_stream_step():
                   jax.ShapeDtypeStruct((l, n), jnp.float32))
 
 
+def _analysis_build_stream_sharded_step():
+    l, n, k, rows = 48, 400, 21, 2 * ACCUM_BLOCK
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    ndev = mesh.shape["data"]
+    spec = PartitionSpec(None, "data")
+
+    def local(x, a_loc, acc_loc):
+        Y_loc = finalize_gaussian_sketch(sketch_accum(x, a_loc, acc_loc),
+                                         l, jnp.float32)
+        return panel_parallel_rid_interp_local(Y_loc, k, axis="data",
+                                               ndev=ndev, panel=7)
+
+    step = shard_map(local, mesh=mesh,
+                     in_specs=(PartitionSpec(), spec, spec),
+                     out_specs=(spec, PartitionSpec(), PartitionSpec(),
+                                spec),
+                     check_vma=False)
+    return step, (jax.ShapeDtypeStruct((l, rows), jnp.float32),
+                  jax.ShapeDtypeStruct((rows, n), jnp.float32),
+                  jax.ShapeDtypeStruct((l, n), jnp.float32))
+
+
 def _register_analysis_entries():
     from ..analysis.registry import register
+    l, n = 48, 400
     register("rid_streamed.step", _analysis_build_stream_step)
+    # The sharded-stream device program PROMISES no collective ever
+    # materializes an l x n (replicated sketch-sized) array per device.
+    register("rid_streamed.sharded_step", _analysis_build_stream_sharded_step,
+             max_collective_elems=l * n - 1)
 
 
 _register_analysis_entries()

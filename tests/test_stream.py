@@ -19,7 +19,7 @@ from repro.core import rid, rid_streamed
 from repro.core.sketch import gaussian_omega_cols, gaussian_sketch
 from repro.kernels.sketch_accum import ACCUM_BLOCK, sketch_accum
 from repro.stream import (ArraySource, ChunkSource, SpectrumSource,
-                          chunk_bounds, num_chunks)
+                          check_chunk_index, chunk_bounds, num_chunks)
 
 
 @pytest.fixture(autouse=True, scope="module")
@@ -243,6 +243,64 @@ def test_validation_source_geometry_lies():
                                          r"float32"):
         rid_streamed(jax.random.key(0), WrongDtype(
             np.zeros((256, 64), np.float32), 128), 8)
+
+
+@pytest.mark.parametrize("c", [-1, 3, 100])
+def test_chunk_out_of_range_raises(c):
+    """The EOF bugfix: chunk(c) past the end raises, naming c and the
+    valid count, instead of silently returning a (0, n) slice (and
+    chunk_bounds never yields degenerate bounds)."""
+    A = np.arange(20.0, dtype=np.float32).reshape(5, 4)
+    msg = (rf"chunk index c={c} out of range for ArraySource with 3 "
+           rf"chunks \(m=5, chunk_rows=2\); valid c are \[0, 3\)")
+    src = ArraySource(A, 2)
+    with pytest.raises(ValueError, match=msg):
+        src.chunk(c)
+    with pytest.raises(ValueError, match=msg):
+        chunk_bounds(src, c)
+    with pytest.raises(ValueError, match=msg):
+        check_chunk_index(src, c)
+
+
+def test_spectrum_chunk_out_of_range_raises():
+    src = SpectrumSource(jax.random.key(0), 64, 16, "cliff", 4,
+                         chunk_rows=32)
+    with pytest.raises(ValueError, match=r"chunk index c=2 out of range "
+                                         r"for SpectrumSource with 2 "
+                                         r"chunks"):
+        src.chunk(2)
+
+
+def test_chunk_rows_exceeding_m_is_one_chunk():
+    """chunk_rows > m: exactly one (short) chunk, correct bounds, and the
+    one-past-the-end index still rejected."""
+    for src in (ArraySource(np.ones((5, 4), np.float32), 100),
+                SpectrumSource(jax.random.key(0), 20, 64, "cliff", 4,
+                               chunk_rows=512, dtype=jnp.float64)):
+        assert num_chunks(src) == 1
+        assert chunk_bounds(src, 0) == (0, src.shape[0])
+        assert src.chunk(0).shape == src.shape
+        with pytest.raises(ValueError, match=r"chunk index c=1 out of "
+                                             r"range"):
+            src.chunk(1)
+
+
+def test_spectrum_fingerprint_separates_matrices():
+    """Same geometry, different generated VALUES -> different
+    fingerprints (the resume-collision bugfix); same construction ->
+    equal fingerprint; chunk_rows is geometry, NOT identity."""
+    def mk(key=0, spectrum="cliff", k=4, floor=1e-6, dtype=jnp.float64,
+           chunk_rows=32):
+        return SpectrumSource(jax.random.key(key), 64, 16, spectrum, k,
+                              chunk_rows=chunk_rows, dtype=dtype,
+                              floor=floor)
+
+    base = mk().fingerprint()
+    assert base == mk().fingerprint()
+    assert base == mk(chunk_rows=16).fingerprint()   # geometry, not identity
+    for other in (mk(key=1), mk(spectrum="fast_decay"), mk(k=5),
+                  mk(floor=1e-8), mk(dtype=jnp.float32)):
+        assert other.fingerprint() != base
 
 
 def test_gaussian_omega_requires_block_offset():

@@ -1,0 +1,249 @@
+"""FileSource (ISSUE 9): the on-disk leg of the streaming RID.
+
+Covers the module's failure-mode table (missing / truncated / mutated
+files), re-read determinism through the async read-ahead, bit-for-bit
+parity of the file-backed ``rid_streamed`` with the in-memory ``rid``,
+and the ``(path, size, mtime_ns)`` resume-fingerprint contract —
+including the chaos composition ``FlakySource(FileSource)``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import rid, rid_streamed
+from repro.runtime import (ChunkReadFailed, FaultPlan, FlakySource,
+                           ProcessKilled, RetryPolicy, SourceDied)
+from repro.obs import FakeClock
+from repro.stream import ChunkSource, FileSource, chunk_bounds, num_chunks
+
+from test_stream import DTYPES, _assert_identical, _matrix
+
+K = 72
+CHUNK = 384                    # 1000 % 384 = 232: uneven final chunk
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scope():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def _npy(tmp_path, A, name="a.npy"):
+    path = tmp_path / name
+    np.save(path, A)
+    return str(path)
+
+
+# --------------------------------------------------------------- reading
+
+@pytest.mark.parametrize("readahead", [0, 1, 3])
+def test_file_source_reads_deterministically(tmp_path, readahead):
+    """Protocol conformance + the re-readability contract: sequential
+    scans, repeated reads of one chunk, and a second full pass all
+    return identical rows — through the read-ahead thread or not."""
+    A = np.arange(5 * 4, dtype=np.float32).reshape(5, 4)
+    with FileSource(_npy(tmp_path, A), 2, readahead=readahead) as src:
+        assert isinstance(src, ChunkSource)
+        assert src.shape == (5, 4) and src.dtype == jnp.dtype(jnp.float32)
+        assert num_chunks(src) == 3 and chunk_bounds(src, 2) == (4, 5)
+        pass1 = [np.array(src.chunk(c)) for c in range(3)]
+        np.testing.assert_array_equal(np.concatenate(pass1), A)
+        assert pass1[2].shape == (1, 4)          # uneven final chunk
+        pass2 = [np.array(src.chunk(c)) for c in range(3)]
+        for x, y in zip(pass1, pass2):
+            np.testing.assert_array_equal(x, y)
+        # repeated + non-sequential reads restart the read-ahead cleanly
+        np.testing.assert_array_equal(src.chunk(1), pass1[1])
+        np.testing.assert_array_equal(src.chunk(0), pass1[0])
+        np.testing.assert_array_equal(src.chunk(2), pass1[2])
+
+
+def test_file_source_single_short_chunk(tmp_path):
+    """chunk_rows > m: one short chunk, and one-past-the-end rejected."""
+    A = np.ones((5, 4), np.float64)
+    with FileSource(_npy(tmp_path, A), 100) as src:
+        assert num_chunks(src) == 1 and src.chunk(0).shape == (5, 4)
+        with pytest.raises(ValueError, match=r"chunk index c=1 out of "
+                                             r"range for FileSource with "
+                                             r"1 chunks"):
+            src.chunk(1)
+
+
+def test_file_source_chunk_out_of_range(tmp_path):
+    A = np.zeros((6, 3), np.float32)
+    with FileSource(_npy(tmp_path, A), 2) as src:
+        for c in (-1, 3):
+            with pytest.raises(ValueError, match=rf"chunk index c={c} out "
+                                                 rf"of range"):
+                src.chunk(c)
+
+
+# ------------------------------------------------------ construction errors
+
+def test_file_source_missing_file(tmp_path):
+    missing = str(tmp_path / "nope.npy")
+    with pytest.raises(FileNotFoundError, match="no such file"):
+        FileSource(missing, 128)
+
+
+def test_file_source_rejects_non_2d(tmp_path):
+    path = _npy(tmp_path, np.zeros((2, 3, 4), np.float32))
+    with pytest.raises(ValueError, match=r"needs a 2-D \.npy, got ndim=3"):
+        FileSource(path, 128)
+
+
+def test_file_source_truncated_file(tmp_path):
+    """A file whose header promises more bytes than it holds fails at
+    CONSTRUCTION (the mmap rejects it), not with garbage rows later."""
+    path = _npy(tmp_path, np.ones((64, 32), np.float64))
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(ValueError):
+        FileSource(path, 32)
+
+
+def test_file_source_validation(tmp_path):
+    path = _npy(tmp_path, np.zeros((4, 4), np.float32))
+    with pytest.raises(ValueError, match=r"need chunk_rows >= 1, got "
+                                         r"chunk_rows=0"):
+        FileSource(path, 0)
+    with pytest.raises(ValueError, match=r"need readahead >= 0, got "
+                                         r"readahead=-1"):
+        FileSource(path, 2, readahead=-1)
+
+
+# ------------------------------------------------------------ mutation/close
+
+@pytest.mark.parametrize("readahead", [0, 2])
+def test_file_source_mtime_drift_is_fatal(tmp_path, readahead):
+    """A file touched mid-job surfaces as SourceDied (permanent — the
+    mmap would mix old and new bytes) on the next read that hits disk,
+    naming the path and both (size, mtime_ns) pairs."""
+    A = np.arange(8 * 3, dtype=np.float64).reshape(8, 3)
+    path = _npy(tmp_path, A)
+    src = FileSource(path, 2, readahead=readahead)
+    src.chunk(0)
+    os.utime(path, ns=(1, 1))                  # mtime drift, same bytes
+    with pytest.raises(SourceDied, match="changed mid-job"):
+        for c in range(1, num_chunks(src)):    # readahead>0 may hand back
+            src.chunk(c)                       # already-prefetched chunks
+    # the source stays usable for ERROR REPORTING but every further disk
+    # read keeps failing (no half-old half-new reads, ever)
+    with pytest.raises(SourceDied):
+        src.chunk(0)
+    src.close()
+
+
+def test_file_source_read_after_close(tmp_path):
+    src = FileSource(_npy(tmp_path, np.zeros((4, 2), np.float32)), 2)
+    src.close()
+    src.close()                                # idempotent
+    with pytest.raises(ValueError, match="is closed"):
+        src.chunk(0)
+
+
+def test_file_source_fingerprint_identity(tmp_path):
+    """fingerprint() is (abspath, size, mtime_ns): same bytes at another
+    path, or the same path re-written, are DIFFERENT matrices to the
+    resume contract."""
+    A = np.ones((6, 3), np.float32)
+    pa, pb = _npy(tmp_path, A, "a.npy"), _npy(tmp_path, A, "b.npy")
+    fa = FileSource(pa, 2).fingerprint()
+    assert fa == (os.path.abspath(pa), os.path.getsize(pa),
+                  os.stat(pa).st_mtime_ns)
+    assert FileSource(pa, 4).fingerprint() == fa   # chunking is geometry
+    assert FileSource(pb, 2).fingerprint() != fa   # other path
+    os.utime(pa, ns=(7, 7))
+    assert FileSource(pa, 2).fingerprint() != fa   # rewritten in place
+
+
+# ------------------------------------------------------- end-to-end + chaos
+
+def test_file_backed_rid_streamed_bit_for_bit(tmp_path):
+    """The pipeline over a FileSource equals the in-memory rid on the
+    loaded matrix EXACTLY — disk in the loop changes no bits."""
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    ref = rid(jax.random.key(1), jnp.asarray(A), K, sketch_kind="gaussian")
+    with FileSource(_npy(tmp_path, A), CHUNK) as src:
+        out = rid_streamed(jax.random.key(1), src, K)
+    _assert_identical(ref, out)
+
+
+def test_file_backed_kill_resume_and_mtime_rejection(tmp_path):
+    """The ISSUE's acceptance property: kill the file-backed run, resume
+    under the SAME (path, size, mtime) fingerprint -> bit-identical;
+    touch the file -> the resume is rejected as a different job."""
+    A = np.asarray(_matrix(DTYPES["float64"]))
+    path = _npy(tmp_path, A)
+    ckpt = str(tmp_path / "ckpt")
+    ref = rid_streamed(jax.random.key(1), FileSource(path, CHUNK), K)
+    flaky = FlakySource(FileSource(path, CHUNK), FaultPlan(kill_at=(2,)))
+    with pytest.raises(ProcessKilled):
+        rid_streamed(jax.random.key(1), flaky, K, resume_dir=ckpt)
+    flaky.close()
+    out = rid_streamed(jax.random.key(1), FileSource(path, CHUNK), K,
+                       resume_dir=ckpt)
+    _assert_identical(ref, out)
+    # now mutate the file: a NEW source over the same path fingerprints
+    # differently, so the old checkpoint directory no longer matches
+    os.utime(path, ns=(1, 1))
+    with pytest.raises(ValueError, match="written by a different job"):
+        rid_streamed(jax.random.key(1), FileSource(path, CHUNK), K,
+                     resume_dir=ckpt)
+
+
+def test_flaky_file_source_chaos_roundtrip(tmp_path):
+    """FlakySource(FileSource): seeded transient faults retry through the
+    read-ahead restart path and the output stays bit-identical; close()
+    delegates to the wrapped source (mmap + reader thread released)."""
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    path = _npy(tmp_path, A)
+    ref = rid_streamed(jax.random.key(1), FileSource(path, CHUNK), K)
+    clk = FakeClock()
+    plan = FaultPlan.from_env(transient_p=0.2)
+    flaky = FlakySource(FileSource(path, CHUNK), plan, clock=clk)
+    pol = RetryPolicy(max_attempts=6, base_delay_s=0.01, clock=clk)
+    out = rid_streamed(jax.random.key(1), flaky, K, retry=pol)
+    _assert_identical(ref, out)
+    assert flaky.injected["transient"] >= 1
+    with flaky:                                   # context-manager close
+        pass
+    assert flaky.inner._closed                    # delegated to FileSource
+    with pytest.raises(ValueError, match="is closed"):
+        flaky.inner.chunk(0)
+
+
+def test_metered_source_delegates_identity(tmp_path):
+    """Observability wrappers must not change the resume identity: a
+    metered FileSource fingerprints its file (before the fix it
+    contributed None, so touched files resumed old checkpoints), and
+    close() reaches the wrapped mmap."""
+    from repro.obs import MeteredSource
+    src = FileSource(_npy(tmp_path, np.zeros((4, 2), np.float32)), 2)
+    met = MeteredSource(src)
+    assert met.fingerprint() == src.fingerprint()
+    assert met.sigmas is None
+    with met:
+        met.chunk(0)
+    assert src._closed
+
+
+def test_file_source_retry_budget_exhaustion_is_clean(tmp_path):
+    """Exhausting the retry budget over a file-backed source raises
+    ChunkReadFailed (not a hang on the dead read-ahead queue — the
+    restart-on-error path in FileSource.chunk)."""
+    A = np.asarray(_matrix(DTYPES["float32"]))
+    src = FileSource(_npy(tmp_path, A), CHUNK)
+    clk = FakeClock()
+    flaky = FlakySource(src, FaultPlan(transient={1: 99}), clock=clk)
+    pol = RetryPolicy(max_attempts=2, base_delay_s=0.01, clock=clk)
+    with pytest.raises(ChunkReadFailed):
+        rid_streamed(jax.random.key(1), flaky, K, retry=pol)
+    flaky.close()

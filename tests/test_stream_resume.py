@@ -17,7 +17,8 @@ jax.config.update("jax_enable_x64", True)
 from repro.obs import FakeClock, tracing
 from repro.runtime import (FaultPlan, FlakySource, ProcessKilled,
                            RetryPolicy)
-from repro.stream import ArraySource, rid_streamed, source_fingerprint
+from repro.stream import (ArraySource, SpectrumSource, rid_streamed,
+                          source_fingerprint)
 
 from test_stream import DTYPES, _assert_identical, _matrix
 
@@ -130,6 +131,33 @@ def test_resume_rejects_foreign_fingerprint(tmp_path):
     with pytest.raises(ValueError, match="written by a different job"):
         rid_streamed(jax.random.key(2), flaky, K,      # different key
                      resume_dir=str(tmp_path))
+
+
+def test_resume_rejects_cross_spectrum_source(tmp_path):
+    """The fingerprint-collision bugfix, end to end: two SpectrumSources
+    with IDENTICAL geometry (m, n, chunk_rows, dtype) but different
+    seeds generate different matrices — before ``SpectrumSource.
+    fingerprint()``, a checkpoint from one silently resumed under the
+    other, mixing two decompositions.  Now it is rejected eagerly."""
+
+    def src(seed):
+        return SpectrumSource(jax.random.key(seed), 640, 120, "fast_decay",
+                              30, chunk_rows=128, dtype=jnp.float64,
+                              floor=1e-10)
+
+    flaky = FlakySource(src(4), FaultPlan(kill_at=(2,)))
+    with pytest.raises(ProcessKilled):
+        rid_streamed(jax.random.key(6), flaky, 30, resume_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="written by a different job"):
+        rid_streamed(jax.random.key(6), src(5), 30,  # same geometry, other
+                     resume_dir=str(tmp_path))       # generated matrix
+    # the matching source still resumes fine
+    out = rid_streamed(jax.random.key(6), src(4), 30,
+                       resume_dir=str(tmp_path))
+    from repro.core import rid
+    ref = rid(jax.random.key(6), jnp.asarray(src(4).materialize()), 30,
+              sketch_kind="gaussian")
+    _assert_identical(ref, out)
 
 
 def test_fingerprint_covers_job_identity():

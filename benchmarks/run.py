@@ -9,12 +9,50 @@ dry-run artifacts exist (launch/dryrun.py writes them).
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
+import os
 import sys
 import time
 
 
 def section(title: str):
     print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+class _RowGuard:
+    """No silent caps: every enabled bench section must APPEND rows to
+    the JSON record.  The perf trajectory sat empty for several PRs with
+    no signal — a section that runs green while writing nothing is worse
+    than one that fails.  Each ``expect_rows`` block counts the record's
+    rows before/after; sections that added none are named, and
+    :meth:`fail_if_empty` exits nonzero listing all of them."""
+
+    def __init__(self, bench_json: str):
+        self.bench_json = bench_json
+        self.empty: list[str] = []
+
+    def _count(self) -> int:
+        if not self.bench_json or not os.path.exists(self.bench_json):
+            return 0
+        with open(self.bench_json) as f:
+            return len(json.load(f))
+
+    @contextlib.contextmanager
+    def expect_rows(self, title: str):
+        if not self.bench_json:        # no record: nothing to audit
+            yield
+            return
+        before = self._count()
+        yield
+        if self._count() <= before:
+            self.empty.append(title)
+
+    def fail_if_empty(self) -> None:
+        if self.empty:
+            print(f"\nSILENT-EMPTY BENCH SECTIONS (no rows appended to "
+                  f"{self.bench_json}): {self.empty}", file=sys.stderr)
+            sys.exit(1)
 
 
 def main():
@@ -30,49 +68,75 @@ def main():
     flags = ["--full"] if args.full else []
     t0 = time.time()
 
-    import os
     if args.bench_json and os.path.exists(args.bench_json):
         os.remove(args.bench_json)         # fresh record per harness run
     js = ["--json", args.bench_json] if args.bench_json else []
+    guard = _RowGuard(args.bench_json)
 
-    from . import (bench_error, bench_qr, bench_scaling, bench_sketch,
-                   bench_stream, bench_total, bench_tsolve, roofline)
+    from . import (bench_error, bench_overlap, bench_qr, bench_scaling,
+                   bench_sketch, bench_stream, bench_total, bench_tsolve,
+                   roofline)
 
     section("Table 1: total RID runtime (phases)")
     bench_total.main(flags)
     section("Table 2: sketch / FFT phase by backend")
     bench_sketch.main(flags)
-    section("Table 3: Gram-Schmidt phase + fused panel-step sweep")
-    bench_qr.main(flags + js)
+    title = "Table 3: Gram-Schmidt phase + fused panel-step sweep"
+    section(title)
+    with guard.expect_rows(title):
+        bench_qr.main(flags + js)
     section("Table 4: factorization of R")
     bench_tsolve.main(flags)
     section("Table 5: ||A - BP||_2 + eq.(3) bound")
     bench_error.main(flags)
-    section("eq.(3) verification grid (known spectra) + width calibration")
-    bench_error.main(flags + ["--grid", *js])
-    section("Streaming RID: flat device residency vs input size")
-    bench_stream.main(flags + js)
+    title = "eq.(3) verification grid (known spectra) + width calibration"
+    section(title)
+    with guard.expect_rows(title):
+        bench_error.main(flags + ["--grid", *js])
+    title = "Streaming RID: flat device residency vs input size"
+    section(title)
+    with guard.expect_rows(title):
+        bench_stream.main(flags + js)
+    title = "Runtime overlap gate: measured H2D-hidden fraction"
+    section(title)
+    with guard.expect_rows(title):
+        bench_overlap.main(flags + js + ["--gate"])
     if not args.skip_scaling:
-        section("Figures 1-2: structural parallel scaling")
-        bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "1,6",
-                            *js])
-        section("Figures 1-2 at the paper's full sizes (lowering-only)")
-        bench_scaling.main(["--procs", "4,8,16,32,64,128", "--rows", "0,6",
-                            "--paper", *js])
-        section("Weak scaling: panel-parallel QRCP vs gather-and-replicate")
-        for impl in ("blocked", "panel_parallel"):
-            bench_scaling.main(["--procs", "4,8,16", "--rows", "1",
-                                "--weak", "--exec", "--qr-impl", impl, *js])
-        section("Strong scaling, executed: measured wall vs roofline model")
-        bench_scaling.main(["--procs", "4,8", "--rows", "1", "--exec", *js])
+        title = "Figures 1-2: structural parallel scaling"
+        section(title)
+        with guard.expect_rows(title):
+            bench_scaling.main(["--procs", "4,8,16,32,64,128",
+                                "--rows", "1,6", *js])
+        title = "Figures 1-2 at the paper's full sizes (lowering-only)"
+        section(title)
+        with guard.expect_rows(title):
+            bench_scaling.main(["--procs", "4,8,16,32,64,128",
+                                "--rows", "0,6", "--paper", *js])
+        title = "Weak scaling: panel-parallel QRCP vs gather-and-replicate"
+        section(title)
+        with guard.expect_rows(title):
+            for impl in ("blocked", "panel_parallel"):
+                bench_scaling.main(["--procs", "4,8,16", "--rows", "1",
+                                    "--weak", "--exec", "--qr-impl", impl,
+                                    *js])
+        title = "Strong scaling, executed: measured wall vs roofline model"
+        section(title)
+        with guard.expect_rows(title):
+            bench_scaling.main(["--procs", "4,8", "--rows", "1", "--exec",
+                                *js])
         if args.bench_json:
             print(f"\nwrote {args.bench_json}")
-    section("Model accuracy: measured wall_s / modeled roofline seconds")
-    model_accuracy_rows(args.bench_json)
-    section("Static analysis: contract findings + measured kernel residency")
-    analysis_rows(args.bench_json)
+    title = "Model accuracy: measured wall_s / modeled roofline seconds"
+    section(title)
+    with guard.expect_rows(title):
+        model_accuracy_rows(args.bench_json)
+    title = "Static analysis: contract findings + measured kernel residency"
+    section(title)
+    with guard.expect_rows(title):
+        analysis_rows(args.bench_json)
     section("Roofline (from dry-run artifacts)")
     roofline.main([])
+    guard.fail_if_empty()
     print(f"\nbenchmarks completed in {time.time() - t0:.0f}s")
 
 

@@ -12,7 +12,11 @@ The script demonstrates, in order:
   1. flat residency — the SAME pipeline over a 1/8-size file and the
      full (>= 1 GB) file, with ``MeteredSource`` sampling live device
      bytes at every chunk: peak residency is flat in ``m`` while the
-     input grows 8x;
+     input grows 8x.  The big run is WATCHED live (ISSUE 10): a
+     ``ProgressReporter`` publishes atomic per-chunk status JSON, a
+     ``TelemetryServer`` serves ``/metrics`` while the run is in flight
+     (scraped mid-run below), and the JSONL trace is analyzed post-hoc
+     by ``obs/timeline.py`` (critical path, throughput, psum overlap);
   2. kill + resume — a seeded ``FlakySource`` kills the small run
      mid-pass-1; resuming against the same file (same ``(path, size,
      mtime_ns)`` fingerprint) replays the remaining chunks onto the
@@ -70,11 +74,11 @@ def write_lowrank_npy(path, m):
     return path
 
 
-def run(path, *, resume_dir=None, wrap=None):
+def run(path, *, resume_dir=None, wrap=None, progress=None):
     with FileSource(path, CHUNK) as fsrc:
         src = MeteredSource(wrap(fsrc) if wrap else fsrc)
         dec = rid_streamed(jax.random.key(8), src, K, mesh=mesh,
-                           resume_dir=resume_dir)
+                           resume_dir=resume_dir, progress=progress)
         return dec, src.peak_bytes
 
 
@@ -87,8 +91,57 @@ small_gb = os.path.getsize(small) / 1e9
 big_gb = os.path.getsize(big) / 1e9
 
 # ---- 1. flat residency: 8x the file, same device working set -----------
+# The big run is the WATCHED one (ISSUE 10): a ProgressReporter publishes
+# atomic status JSON per chunk, a TelemetryServer serves /metrics +
+# /progress while the decomposition is in flight (scraped from a
+# progress callback mid-run), and the JSONL trace is analyzed post-hoc.
+import json as _json
+import urllib.request
+
+from repro.obs import ProgressReporter, TelemetryServer, Timeline, tracing
+
 dec_small, peak_small = run(small)
-dec_big, peak_big = run(big)
+
+status_path = os.path.join(workdir, "progress.json")
+trace_path = os.path.join(workdir, "trace.jsonl")
+scrapes, dones = [], []
+
+
+def watch(status):
+    dones.append(status["done"])
+    if len(dones) == 3:            # a few chunks in: the run is live
+        with urllib.request.urlopen(server.url + "/metrics") as r:
+            scrapes.append((r.status, r.read().decode()))
+        with open(status_path) as f:      # atomic publish: never torn
+            assert _json.load(f)["state"] == "running"
+
+
+reporter = ProgressReporter(status_path, callbacks=[watch])
+with tracing(jsonl=trace_path) as tr, \
+        TelemetryServer(registry=tr.metrics, progress=reporter) as server:
+    print(f"\nwatch the big run: curl {server.url}/metrics  "
+          f"(or /progress, or cat {status_path})")
+    dec_big, peak_big = run(big, progress=reporter)
+
+code, body = scrapes[0]
+assert code == 200 and "repro_stream_chunks_total" in body, body[:200]
+final = _json.load(open(status_path))
+assert final["state"] == "done" and final["done"] == final["total"]
+assert len(set(dones)) > M // 8 // CHUNK    # status advanced per chunk
+print(f"live /metrics scrape mid-run: HTTP {code}, "
+      f"{len(body.splitlines())} metric lines; final status: "
+      f"{final['done']}/{final['total']} {final['state']}, "
+      f"{final['checkpoints']} checkpoints")
+
+# Post-hoc trace analytics: where the wall-clock went, measured rates.
+tl = Timeline.from_jsonl(trace_path)
+thr = tl.throughput()
+top = [f"{name} {sec:.2f}s" for name, sec in tl.critical_path()[:3]]
+print(f"timeline: wall {tl.wall():.2f}s; critical path: {', '.join(top)}; "
+      f"throughput {thr['rows_per_s']:.0f} rows/s, "
+      f"{thr['bytes_per_s'] / 1e6:.0f} MB/s h2d, "
+      f"psum overlap: {tl.psum_overlap()}")
+
 print(f"\nresidency: {small_gb:.2f} GB file -> peak {peak_small / 1e6:.1f} "
       f"MB on device; {big_gb:.2f} GB file -> peak {peak_big / 1e6:.1f} MB")
 assert peak_big < 1.5 * peak_small, (peak_big, peak_small)

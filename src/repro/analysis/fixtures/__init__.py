@@ -21,7 +21,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ...compat import shard_map
 from ..registry import EntryPoint, OverlapSpec
 
-__all__ = ["FIXTURES", "BAD_LINT_SRC", "BAD_SLEEP_SRC", "BADKERNEL_BASE"]
+__all__ = ["FIXTURES", "BAD_LINT_SRC", "BAD_SLEEP_SRC", "BAD_SERVER_SRC",
+           "BADKERNEL_BASE"]
 
 BADKERNEL_BASE = "repro.analysis.fixtures"
 
@@ -170,4 +171,20 @@ import time
 def wait_for_chunk(delay):
     time.sleep(delay)
     return delay
+'''
+
+# For the socket-server rule's control pair: a library module that opens
+# its own HTTP listener instead of going through the sanctioned
+# telemetry endpoint.  Linted as ``serving/bad_server.py`` the rule must
+# fire (once per banned import); linted as ``obs/telemetry.py`` (the one
+# sanctioned server module) it must stay silent.
+BAD_SERVER_SRC = '''\
+import socket
+from http.server import HTTPServer, BaseHTTPRequestHandler
+
+
+def open_listener(port):
+    srv = HTTPServer(("127.0.0.1", port), BaseHTTPRequestHandler)
+    host = socket.gethostname()
+    return srv, host
 '''

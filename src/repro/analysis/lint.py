@@ -31,6 +31,14 @@ The conventions are the repo's own (DESIGN/ROADMAP), turned into checks:
                                   against >= 3 string literals — dispatch
                                   tables (``core.sketch._BACKENDS``) are
                                   the convention.
+  ``lint.socket-server``          ``socket`` / ``socketserver`` /
+                                  ``http.server`` imports in library code
+                                  — a stray listener in a numeric library
+                                  is an attack surface and a test hazard;
+                                  ``obs/telemetry.py`` is the ONE
+                                  sanctioned server module (the
+                                  ``/metrics`` endpoint), mirroring the
+                                  ``obs/clock.py`` clock allowlist.
   ``lint.duplicate-validation``   a re-inlined copy of the canonical
                                   rank/panel bound messages outside
                                   ``core/validate.py`` — shared
@@ -58,6 +66,16 @@ LIBRARY_DIRS = ("core", "kernels", "stream", "models", "serving",
 # gets its time through an injected Clock (or the ambient tracer), so
 # both the clock-call rule and the import-time rule skip exactly here.
 _CLOCK_HOME = ("obs", "clock.py")
+
+# The single sanctioned socket/server module: the telemetry endpoint
+# (/metrics, /healthz, /progress).  Anywhere else, a listening socket in
+# library code is a lint.socket-server finding.
+_SERVER_HOME = ("obs", "telemetry.py")
+
+# Modules whose import anywhere else in the library trips the rule
+# (http.server pulls in socketserver pulls in socket — ban all three
+# entry points so the finding names the door actually used).
+_SERVER_MODULES = ("socket", "socketserver", "http.server")
 
 # The canonical shared-validation message prefixes (core/validate.py);
 # their reappearance elsewhere is a copy-paste of the helpers.
@@ -126,6 +144,7 @@ def lint_file(path, rel: Path) -> list:
     in_library = _is_library(rel)
     is_validate = rel.parts[-2:] == ("core", "validate.py")
     is_clock_home = rel.parts[-2:] == _CLOCK_HOME
+    is_server_home = rel.parts[-2:] == _SERVER_HOME
 
     for node in ast.walk(tree):
         # -- ValueError without an interpolated value ------------------
@@ -210,6 +229,22 @@ def lint_file(path, rel: Path) -> list:
                     f"line {node.lineno}: imports the time module in "
                     f"library code — timing goes through repro.obs "
                     f"(obs.clock is the one sanctioned call site)"))
+        # -- socket / HTTP-server imports ------------------------------
+        if not is_server_home:
+            served = ()
+            if isinstance(node, ast.Import):
+                served = tuple(a.name for a in node.names
+                               if a.name in _SERVER_MODULES)
+            elif isinstance(node, ast.ImportFrom) and \
+                    node.module in _SERVER_MODULES:
+                served = (node.module,)
+            for mod in served:
+                findings.append(Finding(
+                    "lint.socket-server", subject, f"import-{mod}",
+                    f"line {node.lineno}: imports {mod} in library code — "
+                    f"a listening socket outside obs/telemetry.py (the one "
+                    f"sanctioned /metrics server) is an attack surface and "
+                    f"a test hazard"))
 
     if in_library:
         for lineno, var, n in _string_switch_runs(tree):

@@ -79,6 +79,24 @@ def run_controls() -> list:
             "controls.sleep-rule-noisy", "obs/clock.py", "false-alarm",
             "the sanctioned Clock.sleep implementation site was flagged "
             "by lint.time-sleep — the allowlist is broken"))
+
+    from .fixtures import BAD_SERVER_SRC
+    with tempfile.TemporaryDirectory() as td:
+        p = Path(td) / "bad_server.py"
+        p.write_text(BAD_SERVER_SRC)
+        served = lint_file(p, Path("serving") / "bad_server.py")
+        server_home = lint_file(p, Path("obs") / "telemetry.py")
+    if not any(f.rule == "lint.socket-server" for f in served):
+        findings.append(Finding(
+            "controls.server-rule-blind", "fixture.bad-server", "no-alarm",
+            f"the planted HTTP-listener library module produced "
+            f"{[f.rule for f in served]} but no lint.socket-server — "
+            f"stray sockets could dodge the telemetry-endpoint contract"))
+    if any(f.rule == "lint.socket-server" for f in server_home):
+        findings.append(Finding(
+            "controls.server-rule-noisy", "obs/telemetry.py", "false-alarm",
+            "the sanctioned telemetry server module was flagged by "
+            "lint.socket-server — the allowlist is broken"))
     return findings
 
 
@@ -104,5 +122,6 @@ def run_all(*, controls: bool = True) -> Report:
                                       "fixture.overlapped-psum",
                                       "badkernel",
                                       "fixture.in-jit-timer",
-                                      "fixture.bad-sleep"])
+                                      "fixture.bad-sleep",
+                                      "fixture.bad-server"])
     return report

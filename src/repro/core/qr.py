@@ -466,16 +466,20 @@ def _blocked_pivoted_qr_deep(Y: jax.Array, k: int, *, panel: int,
     panels_ctr = obs_trace.counter("qr.panels")
     with obs_trace.span("qr.blocked_deep", l=l, n=n, k=k, panel=panel):
         res2 = _masked_res2(Z, picked, rdtype)
-        off = 0
+        off = pi = 0
         while off < k:
             b = min(panel, k - off)
+            # panel= is the ordinal index (uniform span attribution:
+            # timeline stragglers attribute by chunk=/panel=), off/width
+            # locate it in the factorization.
             with obs_trace.span("qr.panel", engine="blocked-fused",
-                                off=off, width=b) as sp:
+                                panel=pi, off=off, width=b) as sp:
                 Z, res2, picked, Q, piv = _fused_panel_step_jit(
                     Z, res2, picked, Q, piv, off, b)
                 sp.block_on((Z, res2, Q))
             panels_ctr.add(1)
             off += b
+            pi += 1
         with obs_trace.span("qr.final_r") as sp:
             R = _h(Q) @ Y
             sp.block_on(R)

@@ -1,19 +1,30 @@
-"""Runtime observability: spans, metrics, and trace export.
+"""Runtime observability: spans, metrics, trace export — and analytics.
 
 The measurement layer the paper's contribution implies (its result IS a
 per-phase runtime table): injectable clocks (``obs.clock`` — the one
 sanctioned wall-clock site in ``src/repro``), nested spans with
 device-bracketed timing recorded outside jit boundaries (``obs.trace``),
 counters/gauges/histograms plus the live-device-memory sampler
-(``obs.metrics``), and pluggable exporters — JSONL and Chrome/Perfetto
-trace-event JSON (``obs.export``).  See obs/README.md for the span and
-metric catalog and the viewing instructions.
+(``obs.metrics``), and pluggable exporters — JSONL, Chrome/Perfetto
+trace-event JSON, and Prometheus text (``obs.export``,
+``obs.telemetry``).
+
+On top of the recording layer: ``obs.timeline`` reconstructs a finished
+trace into per-phase critical path, measured overlap efficiency, and
+throughput; ``obs.progress`` publishes live done/total/ETA status for
+in-flight jobs; ``obs.telemetry`` serves ``/metrics`` + ``/healthz`` +
+``/progress`` over stdlib HTTP.  See obs/README.md for the span and
+metric catalog, the viewing instructions, and the "watch a long job"
+quickstart.
 """
 from .clock import MONOTONIC, Clock, FakeClock, MonotonicClock, now
 from .export import (ChromeTraceExporter, JsonlExporter, exporter_names,
                      get_exporter, register_exporter)
 from .metrics import (Counter, Gauge, Histogram, MeteredSource,
                       MetricsRegistry, live_device_bytes)
+from .progress import ProgressReporter
+from .telemetry import PrometheusExporter, TelemetryServer, prometheus_text
+from .timeline import PhaseStat, Timeline, TSpan, overlap_report
 from .trace import Span, Tracer, current_tracer, deep_tracing, tracing
 
 __all__ = [
@@ -23,4 +34,7 @@ __all__ = [
     "live_device_bytes", "MeteredSource",
     "JsonlExporter", "ChromeTraceExporter", "register_exporter",
     "get_exporter", "exporter_names",
+    "Timeline", "TSpan", "PhaseStat", "overlap_report",
+    "ProgressReporter",
+    "TelemetryServer", "prometheus_text", "PrometheusExporter",
 ]

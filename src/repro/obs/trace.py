@@ -48,7 +48,7 @@ from .clock import Clock, MONOTONIC
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 
 __all__ = ["Span", "Tracer", "tracing", "current_tracer", "deep_tracing",
-           "span", "event", "counter", "gauge", "histogram"]
+           "span", "event", "counter", "gauge", "histogram", "attributes"]
 
 
 @dataclass
@@ -139,15 +139,32 @@ class Tracer:
         self.spans: list[Span] = []          # finished, in closing order
         self._stack: list[Span] = []
         self._n = 0
+        self._defaults: list[dict] = []      # bind() attribute stack
         self.t_origin: Optional[float] = None
 
     # ------------------------------------------------------------- spans
+    @contextlib.contextmanager
+    def bind(self, **attrs):
+        """Default attributes for every span started in this dynamic
+        extent (explicit span attrs win on key collision).  This is how
+        a job stamps its fingerprint onto all descendant spans without
+        threading an id through every engine API."""
+        self._defaults.append(dict(attrs))
+        try:
+            yield
+        finally:
+            self._defaults.pop()
+
     def start(self, name: str, **attrs) -> Span:
         t0 = self.clock()
         if self.t_origin is None:
             self.t_origin = t0
+        merged: dict = {}
+        for d in self._defaults:
+            merged.update(d)
+        merged.update(attrs)
         sp = Span(name=name, t0=t0, depth=len(self._stack), index=self._n,
-                  attrs=dict(attrs))
+                  attrs=merged)
         self._n += 1
         self._stack.append(sp)
         return sp
@@ -263,6 +280,13 @@ def span(name: str, **attrs):
     no-op context when tracing is off."""
     tr = _CURRENT.get()
     return _null_span_cm() if tr is None else tr.span(name, **attrs)
+
+
+def attributes(**attrs):
+    """Ambient :meth:`Tracer.bind`: default attrs for every span in the
+    extent, or a shared no-op context when tracing is off."""
+    tr = _CURRENT.get()
+    return _null_span_cm() if tr is None else tr.bind(**attrs)
 
 
 def event(name: str, **attrs) -> None:

@@ -275,7 +275,13 @@ class RetryPolicy:
             delay *= 1.0 + self.jitter * _uniform(self._key, self._draws)
         return delay
 
-    def call(self, fn: Callable, *, description: str = "read"):
+    def call(self, fn: Callable, *, description: str = "read",
+             on_retry: Optional[Callable] = None):
+        """Run ``fn`` under the policy.  ``on_retry(attempt, error)`` is
+        invoked once per retry (after the failed attempt, before the
+        backoff sleep) — how a :class:`~repro.obs.progress.
+        ProgressReporter` counts retries without this module knowing
+        about progress reporting."""
         retry_ctr = obs_trace.counter("stream.retry")
         fail_ctr = obs_trace.counter("stream.chunk_failures")
         for attempt in range(self.max_attempts):
@@ -295,6 +301,8 @@ class RetryPolicy:
                 fail_ctr.add(1)
                 raise ChunkReadFailed(description, self.max_attempts) from err
             retry_ctr.add(1)
+            if on_retry is not None:
+                on_retry(attempt + 1, err)
             delay = self.backoff_s(attempt)
             with obs_trace.span("stream.retry", attempt=attempt + 1,
                                 delay_s=delay,

@@ -101,7 +101,7 @@ class ServeEngine:
                  max_len: int = 512,
                  prefill_chunk_tokens: Optional[int] = None,
                  max_queue: Optional[int] = None,
-                 clock: Clock = MONOTONIC):
+                 clock: Clock = MONOTONIC, progress=None):
         if prefill_chunk_tokens is not None:
             if prefill_chunk_tokens < 1:
                 raise ValueError(f"need prefill_chunk_tokens >= 1, got "
@@ -123,6 +123,10 @@ class ServeEngine:
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.max_queue = max_queue
         self._clock = clock
+        # Optional ProgressReporter (obs/progress.py): one unit per
+        # request reaching a terminal status, queue/slot occupancy in
+        # ``extra`` — the live view of a drain.
+        self.progress = progress
         self._queue: list[GenerationRequest] = []
         self._all: list[GenerationRequest] = []
         self._active: dict[int, GenerationRequest] = {}   # slot -> request
@@ -407,6 +411,15 @@ class ServeEngine:
                 self._step_prefill()
                 self._step_decode()
                 steps += 1
+                if self.progress is not None:
+                    self.progress.update(
+                        done=sum(r.status in TERMINAL_STATES
+                                 for r in self._all),
+                        total=len(self._all), phase="serve",
+                        extra={"queue": len(self._queue),
+                               "active": len(self._active),
+                               "prefilling": len(self._prefilling),
+                               "steps": steps})
             self._expire()
             leftovers = (list(self._queue)
                          + [st["req"] for st in self._prefilling.values()]
@@ -425,4 +438,12 @@ class ServeEngine:
                 occ_gauge.set(0)
                 root.set(steps=steps,
                          completed=sum(r.done for r in self._all))
+        if self.progress is not None:
+            terminal = [r for r in self._all if r.status in TERMINAL_STATES]
+            self.progress.update(done=len(terminal), total=len(self._all),
+                                 phase="serve",
+                                 extra={"queue": 0, "active": 0,
+                                        "prefilling": 0, "steps": steps},
+                                 force=True)
+            return terminal
         return [r for r in self._all if r.status in TERMINAL_STATES]

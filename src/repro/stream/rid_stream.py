@@ -78,7 +78,12 @@ for pass 2 — plus ``stream.h2d_bytes`` / ``stream.chunks`` counters, a
 ``device.live_bytes`` gauge sampled at every chunk boundary, and a
 final ``eq3.certificate`` event carrying the paper's eq.(3) bound for
 this (m, n, k), so one trace is simultaneously a perf profile and a
-correctness record.  All spans open/close in THIS host loop, outside
+correctness record.  Every span additionally carries a ``job=`` attr
+(the first 12 hex chars of the resume fingerprint) via the tracer's
+attribute-binding stack, so ``obs/timeline.py`` can join spans to jobs
+even when several jobs share a trace; a ``progress=`` reporter
+(``obs/progress.py``) turns the same per-chunk cadence into live
+done/total/ETA status while the run is in flight.  All spans open/close in THIS host loop, outside
 the jit boundaries (the registered analysis entry's jaxpr is
 instrumentation-free — ``jaxpr.host-transfer`` re-proves it in CI).
 Under normal tracing the per-chunk spans time DISPATCH (no added syncs:
@@ -278,7 +283,7 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                  qr_norm_recompute="auto", mesh: Optional[Mesh] = None,
                  axis: str = "data", overlap: bool = True,
                  retry=None, resume_dir: Optional[str] = None,
-                 checkpoint_every: int = 1) -> IDResult:
+                 checkpoint_every: int = 1, progress=None) -> IDResult:
     """Rank-``k`` randomized ID of a chunk-fed matrix: ``A ~= B @ P``.
 
     Bit-for-bit identical to ``rid(key, A, k, sketch_kind="gaussian",
@@ -327,6 +332,13 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
       checkpoint_every: checkpoint cadence in chunks (default 1 =
         chunk-granular; each pass-1 save materializes the accumulator,
         so raise it to trade re-read work on resume for pipeline slack).
+      progress: optional :class:`~repro.obs.progress.ProgressReporter`.
+        The job reports ``2 * C`` units of work (pass-1 chunks then
+        pass-2 gather chunks), advancing one unit per chunk with phase
+        transitions (``pass1`` / ``qr_interp`` / ``pass2``), checkpoint
+        saves, read retries, and a terminal ``done``/``failed`` state —
+        the reporter's status file / callbacks are the live view of a
+        multi-hour run (obs/README.md, "watch a long job").
 
     Returns an ``IDResult`` whose ``B`` (m x k pivot columns) is
     assembled on the HOST (numpy) so device residency stays m-free;
@@ -396,15 +408,22 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
         if retry is None:
             return _checked_chunk(source, c)
         return retry.call(lambda: _checked_chunk(source, c),
-                          description=f"source.chunk({c})")
+                          description=f"source.chunk({c})",
+                          on_retry=None if progress is None
+                          else progress.on_retry)
 
     C = num_chunks(source)
-    mgr = fp = None
+    # The job identity is computed unconditionally (one sha256 over the
+    # argument text): it is the resume fingerprint AND the `job=` attr
+    # every span carries, so the timeline analyzer can join spans to
+    # jobs across traces.
+    fp = source_fingerprint(key, source, k, l, qr_impl, qr_panel,
+                            qr_norm_recompute)
+    job = bytes(fp).hex()[:12]
+    mgr = None
     phase, start1, start2 = 1, 0, 0
     acc = interp = B = None
     if resume_dir is not None:
-        fp = source_fingerprint(key, source, k, l, qr_impl, qr_panel,
-                                qr_norm_recompute)
         mgr = CheckpointManager(resume_dir)
         state = _load_resume_state(resume_dir, fp)
         if state is not None:
@@ -440,11 +459,24 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
         with obs_trace.span("stream.checkpoint", step=step):
             mgr.save(step, tree)
         ckpt_ctr.add(1)
+        if progress is not None:
+            progress.checkpoint_saved(step)
 
-    with obs_trace.span("rid_streamed", m=m, n=n, k=k, l=l,
-                        chunk_rows=chunk_rows, overlap=overlap,
-                        dtype=str(dtype),
-                        ndev=1 if mesh is None else mesh.shape[axis]):
+    if progress is not None:
+        if not progress.job:
+            progress.job = job
+        progress.update(total=2 * C,
+                        phase="pass1" if phase == 1 else "pass2",
+                        done=start1 if phase == 1 else C + start2,
+                        force=True)
+
+    # Every span below (and in engines this call reaches) inherits the
+    # job fingerprint; the timeline analyzer joins spans to jobs on it.
+    with obs_trace.attributes(job=job), \
+            obs_trace.span("rid_streamed", m=m, n=n, k=k, l=l,
+                           chunk_rows=chunk_rows, overlap=overlap,
+                           dtype=str(dtype),
+                           ndev=1 if mesh is None else mesh.shape[axis]):
         if resume_dir is not None and (start1 or phase == 2):
             obs_trace.event("stream.resume", phase=phase,
                             chunks_done=start1 if phase == 1 else start2)
@@ -483,6 +515,8 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                                 if deep:
                                     sp.block_on(nxt)
                         chunks_ctr.add(1)
+                        if progress is not None:
+                            progress.update(done=c + 1)
                         if mgr is not None and \
                                 ((c + 1) % checkpoint_every == 0
                                  or c + 1 == C):
@@ -494,6 +528,8 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
 
             # ---- steps 2-3: identical jit boundary to the in-memory path
             if interp is None:
+                if progress is not None:
+                    progress.update(phase="qr_interp")
                 with obs_trace.span("stream.qr_interp", qr_impl=qr_impl,
                                     qr_panel=qr_panel) as sp:
                     if mesh is None:
@@ -527,17 +563,30 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
 
             if mgr is not None and phase == 1:
                 save(C + 1, phase2_tree(0))   # a pass-2 resume never
-            with obs_trace.span("stream.pass2",  # redoes pass 1 or the QR
-                                chunks=C, start=start2):
+            if progress is not None:          # redoes pass 1 or the QR
+                progress.update(phase="pass2")
+            with obs_trace.span("stream.pass2", chunks=C, start=start2):
                 for c in range(start2, C):
                     r0, r1 = chunk_bounds(source, c)
+                    # Same device-bracketed discipline as pass 1: when a
+                    # source hands back device arrays, deep tracing
+                    # blocks on the chunk so the span holds true read
+                    # time, not dispatch.
                     with obs_trace.span("stream.gather", chunk=c,
-                                        rows=r1 - r0):
-                        B[r0:r1] = np.asarray(read_chunk(c))[:, J]
+                                        rows=r1 - r0, sync=deep) as sp:
+                        ch = read_chunk(c)
+                        if deep:
+                            sp.block_on(ch)
+                        B[r0:r1] = np.asarray(ch)[:, J]
+                    if progress is not None:
+                        progress.update(done=C + c + 1)
                     if mgr is not None and \
                             ((c + 1) % checkpoint_every == 0 or c + 1 == C):
                         save(C + 1 + c + 1, phase2_tree(c + 1))
         except BaseException:
+            if progress is not None:
+                progress.on_failure()
+                progress.finish("failed")
             if mgr is not None:       # a failed background write must not
                 try:                  # mask the pipeline's own failure
                     mgr.wait()
@@ -558,6 +607,8 @@ def rid_streamed(key: jax.Array, source: ChunkSource, k: int, *,
                 cert["sigma_kp1"] = float(sigmas[k])
                 cert["bound"] = cert["bound_constant"] * cert["sigma_kp1"]
             obs_trace.event("eq3.certificate", **cert)
+    if progress is not None:
+        progress.finish("done")
     return IDResult(B=B, P=P, J=piv, Q=Q, R=R)
 
 

@@ -264,6 +264,25 @@ def test_lint_time_sleep_rule_and_allowlist(tmp_path):
         lint_file(p, pathlib.Path("launch/bad_sleep.py")))
 
 
+def test_lint_socket_server_rule_and_allowlist(tmp_path):
+    """ISSUE 10 satellite: socket / socketserver / http.server imports
+    in a library dir trip lint.socket-server; the same source as
+    obs/telemetry.py (the one sanctioned /metrics server module) or
+    under launch/ does not."""
+    from repro.analysis.fixtures import BAD_SERVER_SRC
+    p = tmp_path / "bad_server.py"
+    p.write_text(BAD_SERVER_SRC)
+    fs = lint_file(p, pathlib.Path("serving/bad_server.py"))
+    assert rules(fs) == ["lint.socket-server"], fs
+    assert len(fs) == 2                     # one finding per banned door
+    assert {f.key for f in fs} == {"import-socket", "import-http.server"}
+    assert "obs/telemetry.py" in fs[0].message
+    assert "lint.socket-server" not in rules(
+        lint_file(p, pathlib.Path("obs/telemetry.py")))
+    assert "lint.socket-server" not in rules(
+        lint_file(p, pathlib.Path("launch/bad_server.py")))
+
+
 def test_lint_clean_on_production_tree():
     findings, files = lint_tree()
     assert len(files) > 60
